@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: timing + artifact output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, List, Tuple
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench")
+
+
+def time_us(fn: Callable, *, repeats: int = 5, number: int = 1) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6
+
+
+def emit(rows: List[Tuple[str, float, str]]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def save_json(name: str, obj) -> None:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, name), "w") as f:
+        json.dump(obj, f, indent=1, default=str)

@@ -1,0 +1,31 @@
+"""Paper Figure 3: the TensorFlow single-thread ARM penalty (recorded), and
+its framework analogue: heavyweight-engine decode paths (jax-backed) vs
+lean numpy paths in single-thread decode on this host (dispatch/runtime
+overhead is the mechanism behind both)."""
+from __future__ import annotations
+
+from benchmarks.common import save_json
+from repro.core import paper_data as PD
+from repro.core.protocols import SingleThreadProtocol
+from repro.jpeg.corpus import build_corpus
+from repro.jpeg.paths import DECODE_PATHS
+
+
+def run(quick: bool = True):
+    rows = []
+    tf = PD.TENSORFLOW_SINGLE_THREAD
+    x86 = (tf["Intel 8581C"] + tf["AMD Zen 5"]) / 2
+    arm = (tf["Neoverse V2"] + tf["Neoverse N1"]) / 2
+    rows.append(("fig3.recorded", 0.0,
+                 f"tf_arm_vs_x86={arm / x86:.2f} (paper: ~3/5 of local "
+                 f"winner on ARM)"))
+
+    corpus = build_corpus(24 if quick else 96, seed=44)
+    st = SingleThreadProtocol(corpus, repeats=2)
+    recs = st.run(["numpy-fast", "jnp-fused"])
+    thr = {r.decoder: r.throughput_mean for r in recs}
+    ratio = thr["jnp-fused"] / thr["numpy-fast"]
+    rows.append(("fig3.live_engine_overhead", 1e6 / thr["jnp-fused"],
+                 f"jnp_vs_numpy_single_thread={ratio:.2f}"))
+    save_json("fig3_live.json", {"thr": thr, "ratio": ratio})
+    return rows

@@ -1,0 +1,50 @@
+"""Kernel microbenches: Pallas (interpret) + jnp refs + numpy transform.
+
+On this CPU runtime the Pallas numbers are interpret-mode (correctness
+surface, not perf); the jnp ref timing is the CPU-executable proxy and the
+roofline analysis covers the TPU story.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import time_us
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 1024 if quick else 8192
+    rng = np.random.RandomState(0)
+    x = rng.randn(n, 64).astype(np.float32) * 50
+    q = rng.randint(1, 99, size=64).astype(np.float32)
+
+    import jax.numpy as jnp
+    xj = jnp.asarray(x)
+    qj = jnp.asarray(q)
+    jref_i = jax.jit(ref.idct8x8)
+    jref_d = jax.jit(ref.dequant_idct)
+    jref_i(xj).block_until_ready()
+    jref_d(xj, qj).block_until_ready()
+    rows.append((f"kernel.idct8x8.ref_jnp[{n}x64]",
+                 time_us(lambda: jref_i(xj).block_until_ready()),
+                 "jit ref"))
+    rows.append((f"kernel.dequant_idct.ref_jnp[{n}x64]",
+                 time_us(lambda: jref_d(xj, qj).block_until_ready()),
+                 "jit ref (fused)"))
+    # interpret-mode pallas (few reps; slow by construction on CPU)
+    out_p = ops.idct8x8(x[:512])
+    err = float(np.abs(np.asarray(out_p)
+                       - np.asarray(jref_i(xj[:512]))).max())
+    rows.append(("kernel.idct8x8.pallas_interpret[512x64]",
+                 time_us(lambda: np.asarray(ops.idct8x8(x[:512])),
+                         repeats=2),
+                 f"allclose_err={err:.1e}"))
+    y = rng.uniform(0, 255, (256, 128)).astype(np.float32)
+    outc = ops.ycbcr2rgb(y, y, y)
+    rows.append(("kernel.ycbcr2rgb.pallas_interpret[256x128]",
+                 time_us(lambda: np.asarray(ops.ycbcr2rgb(y, y, y)),
+                         repeats=2),
+                 f"shape={tuple(outc.shape)}"))
+    return rows

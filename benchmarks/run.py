@@ -1,0 +1,49 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV. --full widens corpora/worker sweeps (default is a quick pass sized
+# for this 1-vCPU container).
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (fig3_tf_penalty, kernels_bench, roofline,
+                            table1_guide, table2_protocol, table3_workers,
+                            table4_tiers, table5_guide)
+    benches = [
+        ("table1", table1_guide),
+        ("table2", table2_protocol),
+        ("table3", table3_workers),
+        ("table4", table4_tiers),
+        ("table5", table5_guide),
+        ("fig3", fig3_tf_penalty),
+        ("kernels", kernels_bench),
+        ("roofline", roofline),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in benches:
+        if only and name not in only:
+            continue
+        try:
+            for row in mod.run(quick=quick):
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{name}.ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 3 + Figure 2: worker-count scaling by platform.
+
+recorded — consistency checks on the published counts (11 decoders split
+           between w=4 and w=8 peaks; Zen 4 the only w=4-majority platform).
+live     — worker sweep {0,2,4,8} on this host for a decoder subset; report
+           per-decoder peak worker count and peak/w0 speedup. (This host
+           has 1 vCPU, so speedups ~<=1 are expected and documented — the
+           point is the protocol, which transfers unchanged to 16-vCPU
+           nodes.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import paper_data as PD
+from repro.core.protocols import LoaderProtocol
+from repro.jpeg.corpus import build_corpus
+from repro.jpeg.paths import DECODE_PATHS
+
+LIVE_PATHS = ["numpy-fast", "numpy-int", "fft-idct"]
+
+
+def run(quick: bool = True):
+    rows = []
+    ok = all(r["peak_w4"] + r["peak_w8"] == PD.NUM_LOADER_DECODERS
+             for r in PD.TABLE3.values())
+    w4major = [p for p, r in PD.TABLE3.items() if r["peak_w4"] > r["peak_w8"]]
+    rows.append(("table3.recorded", 0.0,
+                 f"counts_ok={ok} w4_majority={w4major}"))
+
+    corpus = build_corpus(32 if quick else 128, seed=43)
+    lp = LoaderProtocol(corpus, repeats=1)
+    sweep = {}
+    workers = (0, 2, 4) if quick else (0, 2, 4, 8)
+    for nm in LIVE_PATHS:
+        per = {}
+        for w in workers:
+            r = lp.run_path(DECODE_PATHS[nm], w)
+            per[w] = r.throughput_mean
+        peak_w = max(per, key=per.get)
+        speedup = per[peak_w] / per[0] if per[0] else 0.0
+        sweep[nm] = {"per_worker": per, "peak_w": peak_w,
+                     "speedup": speedup}
+        rows.append((f"table3.live.{nm}", 1e6 / max(per.values()),
+                     f"peak_w={peak_w} speedup={speedup:.2f}x"))
+    save_json("table3_live.json", sweep)
+    return rows

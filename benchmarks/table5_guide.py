@@ -1,0 +1,46 @@
+"""Paper Table 5 / Appendix B: per-platform zero-skip starting points.
+
+recorded — regenerate the per-platform leaders from the recorded matrix via
+           the decision engine and verify against the published first
+           choices.
+live     — the same table for this host.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save_json
+from repro.core import decision, paper_data as PD
+from repro.core.schema import RunRecord
+
+
+def run(quick: bool = True):
+    rows = []
+    recs = []
+    for plat, entries in PD.TABLE5.items():
+        for dec, thr, w in entries:
+            recs.append(RunRecord(
+                platform=plat, decoder=dec, protocol="dataloader",
+                workers=w, mode="thread", throughput_mean=float(thr),
+                throughput_std=0.0, samples=[float(thr)],
+                num_images=50000, skip_indices=[]))
+    peaks = decision.peak_loader_throughput(recs)
+    match = 0
+    for plat, entries in PD.TABLE5.items():
+        ours = max(peaks[plat], key=lambda d: peaks[plat][d].throughput_mean)
+        match += ours == entries[0][0]
+    rows.append(("table5.recorded", 0.0,
+                 f"first_choice_match={match}/5"))
+
+    try:
+        from repro.core.schema import load_records
+        live = load_records("artifacts/bench/live_records_table2.json")
+        lp = decision.peak_loader_throughput(live).get("live-host", {})
+        zs = decision.zero_skip(lp)
+        top = sorted(zs.values(), key=lambda r: -r.throughput_mean)[:3]
+        rows.append(("table5.live", 0.0, " / ".join(
+            f"{r.decoder}:{r.throughput_mean:.0f}img/s(w={r.workers})"
+            for r in top)))
+        save_json("table5_live.json",
+                  [(r.decoder, r.throughput_mean, r.workers) for r in top])
+    except FileNotFoundError:
+        rows.append(("table5.live", 0.0, "run table2 first"))
+    return rows

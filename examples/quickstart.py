@@ -1,0 +1,51 @@
+"""Quickstart: encode a JPEG corpus, decode it three ways, benchmark the two
+protocols, and get an operational recommendation — the paper's workflow in
+~40 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import decision
+from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
+from repro.jpeg.corpus import build_corpus
+from repro.jpeg.paths import DECODE_PATHS
+
+
+def main():
+    # 1. a synthetic ImageNet-like corpus (incl. one rare Adobe-YCCK JPEG)
+    corpus = build_corpus(32, seed=0)
+    print(f"corpus: {len(corpus.files)} JPEGs, rare index "
+          f"{corpus.rare_index}")
+
+    # 2. decode one image through three engines
+    for name in ["numpy-fast", "jnp-fused", "pallas-idct"]:
+        img = DECODE_PATHS[name].decode(corpus.files[0])
+        print(f"  {name:12s} -> {img.shape} {img.dtype}")
+
+    # 3. the two protocols
+    names = ["numpy-fast", "numpy-int", "fft-idct", "strict-fast"]
+    records = SingleThreadProtocol(corpus, repeats=2).run(names)
+    loader = LoaderProtocol(corpus, repeats=1)
+    for n in names:
+        for w in (0, 2):
+            records.append(loader.run_path(DECODE_PATHS[n], w))
+
+    print("\nsingle-thread img/s:")
+    for r in records:
+        if r.protocol == "single_thread":
+            print(f"  {r.decoder:12s} {r.throughput_mean:7.1f} "
+                  f"skips={r.skips}")
+
+    # 4. the decision protocol (zero-skip tier, protocol disagreement)
+    rec = decision.recommend(records)
+    d = rec["protocol_disagreement"]["live-host"]
+    print(f"\nsingle-thread leader: {d['single_leader']}")
+    print(f"loader leader:        {d['loader_leader']}")
+    print(f"rank correlation:     rho={d['rho']:.2f}")
+    print("zero-skip tier:       "
+          + ", ".join(t.decoder for t in rec["tier"]))
+
+
+if __name__ == "__main__":
+    main()

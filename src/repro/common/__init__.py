@@ -1,0 +1,2 @@
+from repro.common import hw, hlo
+from repro.common.pytypes import Params, PyTree

@@ -1,0 +1,68 @@
+"""Target-hardware constants for roofline analysis.
+
+The runtime here is CPU-only; TPU v5e is the *target*. These constants feed the
+three-term roofline (compute / memory / collective) derived from the compiled
+dry-run artifacts. Sources: public TPU v5e specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float      # FLOP/s per chip
+    hbm_bandwidth: float        # bytes/s per chip
+    ici_link_bandwidth: float   # bytes/s per link (one direction)
+    ici_links_per_chip: int     # 2D torus on v5e
+    hbm_bytes: int              # HBM capacity per chip
+    vmem_bytes: int             # VMEM per core (v5e has 1 core/chip)
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links_per_chip=4,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+# MXU native tile: 128x128 systolic array; VPU lanes (8, 128).
+MXU_DIM = 128
+VPU_LANES = 128
+VPU_SUBLANES = 8
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    hbm_bytes_per_chip: float,
+    collective_bytes_per_chip: float,
+    chip: ChipSpec = TPU_V5E,
+) -> dict:
+    """Three-term roofline in seconds-per-step, per chip.
+
+    ``cost_analysis()`` on jax 0.8 reports per-device (post-SPMD-partitioning)
+    FLOPs and bytes, so all inputs here are per-chip quantities. The collective
+    term models each chip pushing its collective payload through its ICI links
+    (all links usable in a 2D torus; we use a single-link bound as the
+    conservative default, matching the prompt's ~50 GB/s/link figure).
+    """
+    compute_s = flops_per_chip / chip.peak_bf16_flops
+    memory_s = hbm_bytes_per_chip / chip.hbm_bandwidth
+    collective_s = collective_bytes_per_chip / chip.ici_link_bandwidth
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=lambda k: terms[k])
+    bound = max(terms.values())
+    total = max(bound, 1e-30)
+    terms["dominant"] = dominant
+    terms["bound_s"] = bound
+    # Roofline fraction: useful-compute time over the binding resource time.
+    terms["roofline_fraction"] = compute_s / total
+    return terms

@@ -1,0 +1,4 @@
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, Stage, LayerSpec,
+    get_config, list_configs, register, shape_applicable,
+)

@@ -1,0 +1,145 @@
+"""The two evaluation protocols + the worker sweep (paper §3).
+
+``SingleThreadProtocol`` — the common shortcut: tight-loop decode of the
+in-memory corpus, one process, one thread.
+
+``LoaderProtocol`` — the deployment-matched protocol: the same corpus
+through the multi-worker DataLoader, measuring delivered batch throughput
+and skip accounting.
+
+``WorkerSweep`` — LoaderProtocol over worker counts {0,2,4,8}.
+
+All protocols emit schema.RunRecord JSON; analysis (rank moves, Spearman,
+tiers) runs downstream on records only — identical for live and recorded
+(paper) data.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.schema import RunRecord
+from repro.data.loader import DataLoader, LoaderConfig
+from repro.jpeg.corpus import Corpus
+from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
+from repro.jpeg.paths import DECODE_PATHS, DecodePath
+
+
+def _thr_samples(fn, n_items: int, repeats: int) -> List[float]:
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        out.append(n_items / dt if dt > 0 else 0.0)
+    return out
+
+
+class SingleThreadProtocol:
+    def __init__(self, corpus: Corpus, *, repeats: int = 3,
+                 warmup: bool = True, platform: str = "live-host"):
+        self.corpus = corpus
+        self.repeats = repeats
+        self.warmup = warmup
+        self.platform = platform
+
+    def run_path(self, path: DecodePath) -> RunRecord:
+        files = self.corpus.files
+        skips: List[int] = []
+
+        def one_pass():
+            for i, f in enumerate(files):
+                try:
+                    path.decode(f)
+                except (UnsupportedJpeg, CorruptJpeg):
+                    if i not in skips:
+                        skips.append(i)
+
+        if self.warmup:
+            one_pass()          # jit-cache warm (paper: steady-state decode)
+        samples = _thr_samples(one_pass, len(files) - len(skips),
+                               self.repeats)
+        return RunRecord(
+            platform=self.platform, decoder=path.name,
+            protocol="single_thread", workers=0, mode="",
+            throughput_mean=float(np.mean(samples)),
+            throughput_std=float(np.std(samples, ddof=1))
+            if len(samples) > 1 else 0.0,
+            samples=samples, num_images=len(files),
+            skip_indices=sorted(skips),
+            meta={"engine": path.engine, "strict": path.strict})
+
+    def run(self, paths: Optional[Sequence[str]] = None) -> List[RunRecord]:
+        names = paths or list(DECODE_PATHS)
+        return [self.run_path(DECODE_PATHS[n]) for n in names]
+
+
+class LoaderProtocol:
+    def __init__(self, corpus: Corpus, *, repeats: int = 2,
+                 batch_size: int = 16, mode: str = "thread",
+                 platform: str = "live-host", warmup: bool = True):
+        self.corpus = corpus
+        self.repeats = repeats
+        self.batch_size = batch_size
+        self.mode = mode
+        self.platform = platform
+        self.warmup = warmup
+
+    def _loader(self, path: DecodePath, workers: int) -> DataLoader:
+        cfg = LoaderConfig(batch_size=self.batch_size, num_workers=workers,
+                           mode=self.mode)
+        return DataLoader(self.corpus.files, self.corpus.labels,
+                          path.decode, cfg, path_name=path.name)
+
+    def run_path(self, path: DecodePath, workers: int) -> RunRecord:
+        if self.mode == "process" and workers > 0 \
+                and not path.process_eligible:
+            return RunRecord(
+                platform=self.platform, decoder=path.name,
+                protocol="dataloader", workers=workers, mode=self.mode,
+                throughput_mean=0.0, throughput_std=0.0, samples=[],
+                num_images=len(self.corpus.files),
+                meta={"eligible": False,
+                      "reason": "not process-loader eligible"})
+        if self.warmup:
+            for _ in self._loader(path, 0):
+                pass
+
+        def one_pass():
+            loader = self._loader(path, workers)
+            n = 0
+            for batch in loader:
+                n += batch["image"].shape[0]
+            one_pass.skips = loader.ledger.indices()
+            one_pass.n = n
+
+        one_pass()
+        samples = _thr_samples(one_pass, len(self.corpus.files), self.repeats)
+        return RunRecord(
+            platform=self.platform, decoder=path.name,
+            protocol="dataloader", workers=workers, mode=self.mode,
+            throughput_mean=float(np.mean(samples)),
+            throughput_std=float(np.std(samples, ddof=1))
+            if len(samples) > 1 else 0.0,
+            samples=samples, num_images=len(self.corpus.files),
+            skip_indices=one_pass.skips,
+            meta={"engine": path.engine, "strict": path.strict,
+                  "eligible": True, "delivered": one_pass.n})
+
+
+class WorkerSweep:
+    WORKERS = (0, 2, 4, 8)
+
+    def __init__(self, corpus: Corpus, **kw):
+        self.loader = LoaderProtocol(corpus, **kw)
+
+    def run(self, paths: Optional[Sequence[str]] = None,
+            workers: Sequence[int] = WORKERS) -> List[RunRecord]:
+        names = paths or list(DECODE_PATHS)
+        out = []
+        for n in names:
+            for w in workers:
+                out.append(self.loader.run_path(DECODE_PATHS[n], w))
+        return out

@@ -1,0 +1,45 @@
+"""Markdown table generators (the artifact's render-readme analogue)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.core.decision import TierEntry
+from repro.core.schema import RunRecord
+
+
+def md_table(headers: List[str], rows: List[List[str]]) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join(["---"] * len(headers)) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)
+
+
+def single_thread_report(records: Sequence[RunRecord]) -> str:
+    rows = []
+    for r in sorted(records, key=lambda r: -r.throughput_mean):
+        if r.protocol != "single_thread":
+            continue
+        rows.append([r.decoder, f"{r.throughput_mean:.1f}",
+                     f"{r.throughput_std:.1f}", r.skips,
+                     r.meta.get("engine", "")])
+    return md_table(["decoder", "img/s", "±std", "skips", "engine"], rows)
+
+
+def loader_report(records: Sequence[RunRecord]) -> str:
+    rows = []
+    for r in sorted(records, key=lambda r: (r.decoder, r.workers)):
+        if r.protocol != "dataloader":
+            continue
+        rows.append([r.decoder, r.workers, r.mode,
+                     f"{r.throughput_mean:.1f}", f"{r.throughput_std:.1f}",
+                     r.skips,
+                     "yes" if r.meta.get("eligible", True) else "no"])
+    return md_table(["decoder", "workers", "mode", "img/s", "±std",
+                     "skips", "eligible"], rows)
+
+
+def tier_report(tier: List[TierEntry]) -> str:
+    rows = [[t.decoder, f"{100*t.mean_norm:.1f}%", f"{100*t.min_norm:.1f}%",
+             f"{100*t.max_norm:.1f}%", t.platforms] for t in tier]
+    return md_table(["decoder", "mean", "min", "max", "platforms"], rows)

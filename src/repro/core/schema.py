@@ -1,0 +1,63 @@
+"""Raw-result schema — the JSON the paper's artifact stores per run.
+
+Every benchmark emits RunRecords; every table/figure is regenerated from
+records (recorded paper matrix or live measurements), never hand-entered
+downstream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import platform
+import sys
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RunRecord:
+    platform: str                  # e.g. "AMD Zen 4" or "live-host"
+    decoder: str
+    protocol: str                  # "single_thread" | "dataloader"
+    workers: int                   # 0 for single-thread protocol
+    mode: str                      # "", "thread", "process"
+    throughput_mean: float         # images/s
+    throughput_std: float
+    samples: List[float] = dataclasses.field(default_factory=list)
+    num_images: int = 0
+    skip_indices: List[int] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def skips(self) -> int:
+        return len(self.skip_indices)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "RunRecord":
+        return RunRecord(**d)
+
+
+def host_metadata() -> dict:
+    import os
+    return {
+        "python": sys.version.split()[0],
+        "machine": platform.machine(),
+        "processor": platform.processor() or "unknown",
+        "cpus": os.cpu_count(),
+        "time": time.time(),
+    }
+
+
+def save_records(records: List[RunRecord], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump({"host": host_metadata(),
+                   "records": [r.to_json() for r in records]}, f, indent=1)
+
+
+def load_records(path: str) -> List[RunRecord]:
+    with open(path) as f:
+        d = json.load(f)
+    return [RunRecord.from_json(r) for r in d["records"]]

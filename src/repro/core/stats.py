@@ -1,0 +1,71 @@
+"""Statistical policy of the paper (§3): descriptive mean±std, Spearman rank
+correlation over raw samples, and practical-significance thresholds (1%
+single-thread, 5% DataLoader) before strict faster/slower language."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+SINGLE_THREAD_THRESHOLD = 0.01
+DATALOADER_THRESHOLD = 0.05
+
+
+def mean_std(samples: Sequence[float]) -> Tuple[float, float]:
+    a = np.asarray(samples, dtype=np.float64)
+    return float(a.mean()), float(a.std(ddof=1)) if len(a) > 1 else 0.0
+
+
+def rankdata(values: Sequence[float]) -> np.ndarray:
+    """Average ranks (1 = largest value), ties averaged."""
+    v = np.asarray(values, dtype=np.float64)
+    order = np.argsort(-v, kind="stable")
+    ranks = np.empty(len(v), dtype=np.float64)
+    ranks[order] = np.arange(1, len(v) + 1)
+    for val in np.unique(v):
+        mask = v == val
+        if mask.sum() > 1:
+            ranks[mask] = ranks[mask].mean()
+    return ranks
+
+
+def spearman_rho(x: Sequence[float], y: Sequence[float]) -> float:
+    if len(x) < 2:
+        return 1.0
+    rx, ry = rankdata(x), rankdata(y)
+    rx = rx - rx.mean()
+    ry = ry - ry.mean()
+    denom = np.sqrt((rx ** 2).sum() * (ry ** 2).sum())
+    return float((rx * ry).sum() / denom) if denom else 0.0
+
+
+def practically_faster(a_mean: float, b_mean: float,
+                       threshold: float) -> bool:
+    """a is 'faster' than b only beyond the practical threshold."""
+    return a_mean > b_mean * (1.0 + threshold)
+
+
+def comparison_language(a_mean: float, b_mean: float,
+                        threshold: float) -> str:
+    if practically_faster(a_mean, b_mean, threshold):
+        return "faster"
+    if practically_faster(b_mean, a_mean, threshold):
+        return "slower"
+    return "tied"
+
+
+def rank_moves(single: Dict[str, float], loader: Dict[str, float]
+               ) -> Dict[str, Tuple[int, int]]:
+    """decoder -> (single-thread rank, loader rank); common keys only."""
+    keys = [k for k in single if k in loader]
+    sr = rankdata([single[k] for k in keys])
+    lr = rankdata([loader[k] for k in keys])
+    return {k: (int(round(sr[i])), int(round(lr[i])))
+            for i, k in enumerate(keys)}
+
+
+def largest_rank_move(single: Dict[str, float], loader: Dict[str, float]
+                      ) -> Tuple[str, int, int]:
+    moves = rank_moves(single, loader)
+    name = max(moves, key=lambda k: abs(moves[k][0] - moves[k][1]))
+    return (name,) + moves[name]

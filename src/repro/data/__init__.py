@@ -1,0 +1,2 @@
+from repro.data.loader import DataLoader, LoaderConfig, SkipLedger
+from repro.data.autotune import autotune_workers

@@ -1,0 +1,285 @@
+"""Multi-worker data loader: the system under evaluation.
+
+PyTorch-DataLoader-shaped (num_workers semantics: 0 = decode inline in the
+consumer; N = parallel workers) with two pool modes:
+
+* ``thread``  — the JAX/grain-idiomatic choice: numpy and jitted decode
+  release the GIL, so thread workers scale without fork hazards. All decode
+  paths are thread-eligible.
+* ``process`` — the paper's fork-based harness semantics. Only
+  ``process_eligible`` decode paths run here (numpy family); jax-backed
+  paths are excluded, the analogue of "PyVips is not loader-eligible under
+  this forked harness".
+
+Production features exercised by tests:
+  * bounded prefetch (backpressure), ordered delivery
+  * skip ledger (strict-decoder robustness accounting — paper §4.4)
+  * straggler mitigation: backup dispatch after an adaptive latency budget
+  * checkpointable iterator state (epoch, cursor, skips, rng) — resumes
+    exactly alongside model checkpoints
+  * per-host sharding hook for multi-host data parallelism
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
+
+
+@dataclasses.dataclass
+class LoaderConfig:
+    batch_size: int = 16
+    num_workers: int = 0
+    mode: str = "thread"              # thread | process
+    prefetch: int = 4                 # in-flight item budget (per worker)
+    target_hw: Tuple[int, int] = (64, 64)
+    drop_remainder: bool = False
+    shuffle: bool = False
+    seed: int = 0
+    straggler_backup: bool = False    # backup-dispatch work stealing
+    straggler_factor: float = 4.0     # budget = factor * running median
+    shard_index: int = 0              # per-host sharding
+    shard_count: int = 1
+
+
+class SkipLedger:
+    """Robustness accounting: which items were skipped and why."""
+
+    def __init__(self):
+        self.skips: List[Tuple[int, str]] = []
+        self._lock = threading.Lock()
+
+    def record(self, index: int, reason: str) -> None:
+        with self._lock:
+            self.skips.append((index, reason))
+
+    @property
+    def count(self) -> int:
+        return len(self.skips)
+
+    def indices(self) -> List[int]:
+        return sorted(i for i, _ in self.skips)
+
+    def state(self) -> list:
+        return list(self.skips)
+
+    def restore(self, state) -> None:
+        self.skips = [tuple(s) for s in state]
+
+
+def center_fit(img: np.ndarray, th: int, tw: int) -> np.ndarray:
+    """Center-crop/pad to (th, tw) — the collate transform."""
+    h, w = img.shape[:2]
+    y0 = max((h - th) // 2, 0)
+    x0 = max((w - tw) // 2, 0)
+    img = img[y0:y0 + th, x0:x0 + tw]
+    ph, pw = th - img.shape[0], tw - img.shape[1]
+    if ph or pw:
+        img = np.pad(img, ((0, ph), (0, pw), (0, 0)))
+    return img
+
+
+# process-pool plumbing: globals installed by the initializer (fork/spawn)
+_PROC_FILES: Optional[List[bytes]] = None
+_PROC_DECODE: Optional[Callable] = None
+
+
+def _proc_init(files, path_name):
+    global _PROC_FILES, _PROC_DECODE
+    from repro.jpeg.paths import get_path
+    _PROC_FILES = files
+    _PROC_DECODE = get_path(path_name).decode
+
+
+def _proc_work(i):
+    try:
+        return i, _PROC_DECODE(_PROC_FILES[i]), None
+    except (UnsupportedJpeg, CorruptJpeg) as e:
+        return i, None, f"{type(e).__name__}: {e}"
+
+
+class DataLoader:
+    """Iterable over batches: dict(image [B,H,W,3] u8, label [B] i32)."""
+
+    def __init__(self, files: Sequence[bytes], labels: Sequence[int],
+                 decode_fn: Callable[[bytes], np.ndarray],
+                 cfg: LoaderConfig, *, path_name: Optional[str] = None):
+        self.files = files
+        self.labels = np.asarray(labels, np.int32)
+        self.decode_fn = decode_fn
+        self.cfg = cfg
+        self.path_name = path_name
+        self.ledger = SkipLedger()
+        self.epoch = 0
+        self.cursor = 0
+        self._rng = np.random.RandomState(cfg.seed)
+        self._latencies: List[float] = []
+
+    # ------------------------------------------------------------ state
+    def state(self) -> Dict[str, Any]:
+        return {"epoch": self.epoch, "cursor": self.cursor,
+                "skips": self.ledger.state(),
+                "rng": self._rng.get_state()[1].tolist(),
+                "seed": self.cfg.seed}
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        self.epoch = state["epoch"]
+        self.cursor = state["cursor"]
+        self.ledger.restore(state["skips"])
+        st = self._rng.get_state()
+        self._rng.set_state((st[0], np.array(state["rng"], dtype=np.uint32),
+                             624, 0, 0.0))
+
+    # ------------------------------------------------------------ order
+    def _epoch_order(self) -> np.ndarray:
+        idx = np.arange(len(self.files))
+        idx = idx[self.cfg.shard_index::self.cfg.shard_count]
+        if self.cfg.shuffle:
+            self._rng.shuffle(idx)
+        return idx
+
+    # ------------------------------------------------------------ decode
+    def _decode_one(self, i: int):
+        try:
+            return self.decode_fn(self.files[i])
+        except (UnsupportedJpeg, CorruptJpeg) as e:
+            self.ledger.record(i, f"{type(e).__name__}: {e}")
+            return None
+
+    def _iter_decoded_sync(self, order):
+        for i in order:
+            img = self._decode_one(int(i))
+            if img is not None:
+                yield int(i), img
+
+    def _iter_decoded_threads(self, order):
+        cfg = self.cfg
+        ex = ThreadPoolExecutor(max_workers=cfg.num_workers)
+        backup_ex = (ThreadPoolExecutor(max_workers=max(2, cfg.num_workers))
+                     if cfg.straggler_backup else None)
+        inflight = cfg.num_workers * cfg.prefetch
+        try:
+            pending: Dict[int, Any] = {}
+            submit_t: Dict[int, float] = {}
+            order = [int(i) for i in order]
+            pos = 0
+            emit = 0
+            while emit < len(order):
+                while pos < len(order) and len(pending) < inflight:
+                    i = order[pos]
+                    pending[pos] = ex.submit(self._decode_one, i)
+                    submit_t[pos] = time.monotonic()
+                    pos += 1
+                fut = pending[emit]
+                if cfg.straggler_backup and not fut.done():
+                    med = (np.median(self._latencies)
+                           if len(self._latencies) >= 8 else None)
+                    budget = (cfg.straggler_factor * med) if med else None
+                    if budget is not None:
+                        waited = time.monotonic() - submit_t[emit]
+                        try:
+                            img = fut.result(
+                                timeout=max(budget - waited, 1e-3))
+                        except Exception:
+                            # backup dispatch: race a second attempt
+                            b = backup_ex.submit(
+                                self._decode_one, order[emit])
+                            img = b.result()
+                            fut.cancel()
+                        self._note(submit_t.pop(emit))
+                        del pending[emit]
+                        if img is not None:
+                            yield order[emit], img
+                        emit += 1
+                        continue
+                img = fut.result()
+                self._note(submit_t.pop(emit))
+                del pending[emit]
+                if img is not None:
+                    yield order[emit], img
+                emit += 1
+        finally:
+            ex.shutdown(wait=False, cancel_futures=True)
+            if backup_ex:
+                backup_ex.shutdown(wait=False, cancel_futures=True)
+
+    def _note(self, t0: float) -> None:
+        self._latencies.append(time.monotonic() - t0)
+        if len(self._latencies) > 512:
+            del self._latencies[:256]
+
+    def _iter_decoded_procs(self, order):
+        import multiprocessing as mp
+        assert self.path_name is not None, \
+            "process mode needs a registered path name"
+        from repro.jpeg.paths import get_path
+        if not get_path(self.path_name).process_eligible:
+            raise RuntimeError(
+                f"decode path {self.path_name!r} is not process-loader "
+                "eligible (jax-backed paths are thread-only; see DESIGN.md)")
+        ctx = mp.get_context("fork")
+        with ctx.Pool(self.cfg.num_workers, initializer=_proc_init,
+                      initargs=(list(self.files), self.path_name)) as pool:
+            for i, img, err in pool.imap(
+                    _proc_work, [int(i) for i in order],
+                    chunksize=max(1, self.cfg.prefetch)):
+                if err is not None:
+                    self.ledger.record(i, err)
+                elif img is not None:
+                    yield i, img
+
+    # ------------------------------------------------------------ iterate
+    def __iter__(self):
+        cfg = self.cfg
+        order = self._epoch_order()[self.cursor:]
+        if cfg.num_workers == 0:
+            decoded = self._iter_decoded_sync(order)
+        elif cfg.mode == "thread":
+            decoded = self._iter_decoded_threads(order)
+        elif cfg.mode == "process":
+            decoded = self._iter_decoded_procs(order)
+        else:
+            raise ValueError(cfg.mode)
+
+        th, tw = cfg.target_hw
+        imgs, labs = [], []
+        for i, img in decoded:
+            imgs.append(center_fit(img, th, tw))
+            labs.append(self.labels[i])
+            self.cursor += 1
+            if len(imgs) == cfg.batch_size:
+                yield {"image": np.stack(imgs),
+                       "label": np.asarray(labs, np.int32)}
+                imgs, labs = [], []
+        if imgs and not cfg.drop_remainder:
+            yield {"image": np.stack(imgs),
+                   "label": np.asarray(labs, np.int32)}
+        self.epoch += 1
+        self.cursor = 0
+
+
+def prefetch_to_device(iterator, size: int = 2):
+    """Host->device double buffering (overlaps H2D copy with compute)."""
+    import jax
+    buf = queue.Queue(maxsize=size)
+    sentinel = object()
+
+    def producer():
+        for item in iterator:
+            buf.put(jax.device_put(item))
+        buf.put(sentinel)
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    while True:
+        item = buf.get()
+        if item is sentinel:
+            return
+        yield item

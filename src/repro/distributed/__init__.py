@@ -1,0 +1,1 @@
+from repro.distributed.sharding import param_specs, batch_specs, make_context

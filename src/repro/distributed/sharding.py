@@ -1,0 +1,185 @@
+"""Sharding rules: param-path -> PartitionSpec (MaxText-style logical axes).
+
+Physical mesh axes:
+  pod    - outer data parallelism across pods (multi-pod mesh only)
+  data   - data parallelism within a pod; also the FSDP/ZeRO-3 axis for
+           parameters and optimizer state (weights sharded on their d_model
+           dim, all-gathered on use)
+  model  - tensor parallelism: heads / ffn-hidden / vocab / experts
+
+Rules are name+shape pattern matches over the param pytree; every dim is
+guarded by divisibility against the mesh (non-divisible dims replicate, e.g.
+gemma3's 8 query heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ModelContext
+
+
+def make_context(mesh: Optional[Mesh], **kw) -> ModelContext:
+    if mesh is None:
+        return ModelContext(**kw)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if kw.get("no_tp"):
+        # pure-DP remap: the physical model axis becomes extra data
+        # parallelism (small models waste a 16-way TP axis — hillclimb A).
+        data_axes = data_axes + ("model",)
+        kw.setdefault("moe_impl", "dense")
+    kw.setdefault("moe_impl", "ep")
+    return ModelContext(mesh=mesh, data_axes=data_axes, model_axis="model",
+                        **kw)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop axes that don't divide their dim (replicate instead)."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0 and dim > 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# Base (unstacked) rules: leaf name -> callable(shape) -> PartitionSpec.
+# 'fsdp' = data axis on the d_model-like dim; 'tp' = model axis.
+_RULES = {
+    "embed":    lambda s: P("model", None),
+    "unembed":  lambda s: P("data", "model"),
+    "final_ln": lambda s: P(None),
+    "wq":       lambda s: P("data", "model"),
+    "wk":       lambda s: P("data", "model"),
+    "wv":       lambda s: P("data", "model"),
+    "wo":       lambda s: P("model", "data"),
+    "bq":       lambda s: P("model"),
+    "bk":       lambda s: P("model"),
+    "bv":       lambda s: P("model"),
+    "gate":     lambda s: P(),
+    "ln":       lambda s: P(None),
+    # MLA
+    "wq_a":     lambda s: P("data", None),
+    "q_ln":     lambda s: P(None),
+    "wq_b":     lambda s: P(None, "model"),
+    "wkv_a":    lambda s: P("data", None),
+    "kv_ln":    lambda s: P(None),
+    "wk_b":     lambda s: P(None, "model"),
+    "wv_b":     lambda s: P(None, "model"),
+    # FFN
+    "w1":       lambda s: P("data", "model") if len(s) == 2
+                          else P("model", "data", None),   # moe experts [E,d,ff]
+    "w3":       lambda s: P("data", "model") if len(s) == 2
+                          else P("model", "data", None),
+    "w2":       lambda s: P("model", "data") if len(s) == 2
+                          else P("model", None, "data"),   # moe [E,ff,d]
+    "router":   lambda s: P(None, None),
+    "sh_w1":    lambda s: P("data", "model"),
+    "sh_w3":    lambda s: P("data", "model"),
+    "sh_w2":    lambda s: P("model", "data"),
+    # Mamba2
+    "in_proj":  lambda s: P("data", "model"),
+    "conv_w":   lambda s: P(None, "model"),
+    "conv_b":   lambda s: P("model"),
+    "A_log":    lambda s: P(None),
+    "D":        lambda s: P(None),
+    "dt_bias":  lambda s: P(None),
+    "gnorm":    lambda s: P(None),
+    "out_proj": lambda s: P("model", "data"),
+    # MTP
+    "proj":     lambda s: P("data", None),
+    "ln_h":     lambda s: P(None),
+    "ln_e":     lambda s: P(None),
+}
+
+_TOP_LEVEL = ("embed", "unembed", "final_ln")
+
+
+def _spec_for_path(path, leaf_shape, mesh: Mesh, no_tp: bool = False) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    rule = _RULES.get(name)
+    if rule is None:
+        return P()
+    stacked = (name not in _TOP_LEVEL
+               and not any("shared" in k for k in keys[:-1])
+               and keys[0].startswith("stage"))
+    if stacked:
+        base = rule(leaf_shape[1:])
+        spec = P(*((None,) + tuple(base)))
+    else:
+        spec = rule(leaf_shape)
+    if no_tp:
+        spec = P(*(None if a == "model" else a for a in spec))
+    return _guard(mesh, spec, leaf_shape)
+
+
+def param_specs(param_shapes, mesh: Mesh, no_tp: bool = False):
+    """PartitionSpec pytree matching the param pytree (shapes or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_path(path, leaf.shape, mesh, no_tp),
+        param_shapes)
+
+
+def param_shardings(param_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(param_shapes, mesh))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(mesh: Mesh, batch_shapes: Dict[str, Any],
+                axes: Optional[Tuple[str, ...]] = None):
+    """Shard the leading (batch) dim of every input over the data axes."""
+    baxes = axes if axes is not None else batch_axes(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % _axis_size(mesh, baxes) == 0:
+            return P(baxes, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh):
+    """KV/SSM cache sharding: batch over data axes; for batch=1 long-context
+    decode, shard the cache sequence dim over data instead (context split)."""
+    baxes = batch_axes(mesh)
+    bsize = _axis_size(mesh, baxes)
+
+    def spec(path, leaf):
+        # leaf: [repeat, B, S_or_other, ...]
+        shape = leaf.shape
+        dims = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % bsize == 0:
+            dims[1] = baxes
+        elif len(shape) >= 3 and shape[2] % bsize == 0:
+            # batch=1: shard dim2 (cache sequence / heads) over data axes
+            dims[2] = baxes
+        # shard KV heads / latent dim over model when divisible; else fall
+        # back to sharding the cache sequence dim over model (GQA archs
+        # with 4-8 KV heads on a 16-way axis — decode attention partitions
+        # over the KV sequence instead).
+        msize = mesh.shape["model"]
+        if len(shape) >= 4 and shape[3] % msize == 0:
+            dims[3] = "model"
+        elif (len(shape) >= 3 and dims[2] is None
+              and shape[2] % msize == 0):
+            dims[2] = "model"
+        return P(*dims)
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

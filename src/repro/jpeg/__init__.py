@@ -1,0 +1,1 @@
+from repro.jpeg.paths import DECODE_PATHS, get_path, UnsupportedJpeg

@@ -1,0 +1,73 @@
+"""Synthetic ImageNet-val-like JPEG corpus (in-memory benchmark workload).
+
+The paper's workload is the 50k-image ImageNet validation split decoded from
+memory. Offline here, we synthesize a deterministic corpus with matched
+*structure*: mixed resolutions, quality spread, 4:2:0/4:4:4 subsampling, and
+exactly one rare Adobe-YCCK 4-component JPEG at the scaled analogue of
+ImageNet-val index 19876 — the image every strict decoder skips (paper
+section 4.4). Images are natural-ish (band-limited fields + texture noise)
+so entropy-coded sizes and coefficient sparsity resemble photographic JPEGs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.jpeg import encoder
+
+RARE_INDEX_IMAGENET = 19876
+IMAGENET_VAL_SIZE = 50000
+
+
+@dataclasses.dataclass
+class Corpus:
+    files: List[bytes]
+    labels: np.ndarray
+    rare_index: int
+    sizes: List[Tuple[int, int]]
+
+    def __len__(self) -> int:
+        return len(self.files)
+
+
+def natural_image(rng: np.random.RandomState, h: int, w: int) -> np.ndarray:
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    img = np.zeros((h, w, 3))
+    for _ in range(4):
+        fy, fx = rng.uniform(0.01, 0.2, size=2)
+        ph, amp = rng.uniform(0, 6.28), rng.uniform(20, 70)
+        base = np.sin(yy * fy + xx * fx + ph)
+        img += amp * base[..., None] * rng.uniform(0.3, 1.0, size=3)
+    img += 128.0
+    img += rng.randn(h, w, 3) * rng.uniform(2, 10)
+    return np.clip(img, 0, 255).astype(np.uint8)
+
+
+def scaled_rare_index(n: int) -> int:
+    """Scale ImageNet index 19876/50000 into an n-image corpus."""
+    return int(RARE_INDEX_IMAGENET / IMAGENET_VAL_SIZE * n)
+
+
+def build_corpus(n: int = 200, *, seed: int = 0,
+                 sizes: Optional[List[Tuple[int, int]]] = None,
+                 num_classes: int = 10) -> Corpus:
+    rng = np.random.RandomState(seed)
+    size_pool = sizes or [(64, 64), (64, 96), (96, 96), (96, 128),
+                          (128, 128)]
+    rare = scaled_rare_index(n)
+    files, dims = [], []
+    labels = rng.randint(0, num_classes, size=n)
+    for i in range(n):
+        h, w = size_pool[int(rng.randint(len(size_pool)))]
+        img = natural_image(rng, h, w)
+        if i == rare:
+            files.append(encoder.encode_jpeg_ycck(img, quality=88))
+        else:
+            q = int(rng.choice([60, 75, 85, 92, 95]))
+            sub = "420" if rng.rand() < 0.7 else "444"
+            files.append(encoder.encode_jpeg(img, quality=q,
+                                             subsampling=sub))
+        dims.append((h, w))
+    return Corpus(files=files, labels=labels, rare_index=rare, sizes=dims)

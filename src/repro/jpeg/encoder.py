@@ -1,0 +1,276 @@
+"""Baseline JPEG encoder (numpy) — corpus generator for the benchmark.
+
+Writes real JFIF byte streams: SOI/APP0/DQT/SOF0/DHT/SOS/EOI, standard
+Annex-K Huffman tables, 4:4:4 or 4:2:0 subsampling, quality-scaled
+quantization, interleaved MCUs, byte stuffing. Also writes the *rare* JPEG
+mode the paper's robustness finding keys on (ImageNet-val index 19876): a
+4-component Adobe (APP14, transform=2) YCCK image that strict decoders
+reject.
+"""
+from __future__ import annotations
+
+import struct
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.jpeg import tables as T
+
+
+# ---------------------------------------------------------------- bit writer
+class BitWriter:
+    def __init__(self):
+        self.buf = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def write(self, code: int, length: int) -> None:
+        self.acc = (self.acc << length) | (code & ((1 << length) - 1))
+        self.nbits += length
+        while self.nbits >= 8:
+            b = (self.acc >> (self.nbits - 8)) & 0xFF
+            self.buf.append(b)
+            if b == 0xFF:
+                self.buf.append(0x00)          # byte stuffing
+            self.nbits -= 8
+        self.acc &= (1 << self.nbits) - 1
+
+    def flush(self) -> bytes:
+        if self.nbits:
+            pad = 8 - self.nbits
+            self.write((1 << pad) - 1, pad)    # pad with 1s
+        return bytes(self.buf)
+
+
+def _magnitude(v: int) -> Tuple[int, int]:
+    """JPEG magnitude category + offset bits."""
+    if v == 0:
+        return 0, 0
+    size = int(abs(v)).bit_length()
+    bits = v if v > 0 else v + (1 << size) - 1
+    return size, bits
+
+
+# ---------------------------------------------------------------- transforms
+def rgb_to_ycbcr(rgb: np.ndarray) -> np.ndarray:
+    rgb = rgb.astype(np.float64)
+    r, g, b = rgb[..., 0], rgb[..., 1], rgb[..., 2]
+    y = 0.299 * r + 0.587 * g + 0.114 * b
+    cb = -0.168736 * r - 0.331264 * g + 0.5 * b + 128.0
+    cr = 0.5 * r - 0.418688 * g - 0.081312 * b + 128.0
+    return np.stack([y, cb, cr], axis=-1)
+
+
+def _to_blocks(plane: np.ndarray) -> np.ndarray:
+    """[H, W] (multiples of 8) -> [n_blocks, 8, 8] raster MCU order."""
+    H, W = plane.shape
+    return (plane.reshape(H // 8, 8, W // 8, 8)
+                 .transpose(0, 2, 1, 3).reshape(-1, 8, 8))
+
+
+def _fdct_quant(blocks: np.ndarray, q: np.ndarray) -> np.ndarray:
+    c = T.dct_matrix()
+    shifted = blocks.astype(np.float64) - 128.0
+    coef = np.einsum("ki,nij,lj->nkl", c, shifted, c)
+    return np.round(coef / q[None]).astype(np.int32)
+
+
+def _pad_to(img: np.ndarray, mh: int, mw: int) -> np.ndarray:
+    H, W = img.shape[:2]
+    ph = (mh - H % mh) % mh
+    pw = (mw - W % mw) % mw
+    if ph or pw:
+        img = np.pad(img, ((0, ph), (0, pw)) + ((0, 0),) * (img.ndim - 2),
+                     mode="edge")
+    return img
+
+
+# ---------------------------------------------------------------- segments
+def _seg(marker: int, payload: bytes) -> bytes:
+    return struct.pack(">BBH", 0xFF, marker, len(payload) + 2) + payload
+
+
+def _dqt(tid: int, q: np.ndarray) -> bytes:
+    zz = q.reshape(-1)[T.ZIGZAG].astype(np.uint8)
+    return _seg(0xDB, bytes([tid]) + zz.tobytes())
+
+
+def _dht(tc: int, th: int, bits, vals) -> bytes:
+    return _seg(0xC4, bytes([(tc << 4) | th]) + bytes(bits[1:17])
+                + bytes(vals))
+
+
+def _sof0(h: int, w: int, comps) -> bytes:
+    p = struct.pack(">BHHB", 8, h, w, len(comps))
+    for cid, hs, vs, tq in comps:
+        p += bytes([cid, (hs << 4) | vs, tq])
+    return _seg(0xC0, p)
+
+
+def _sos(comps) -> bytes:
+    p = bytes([len(comps)])
+    for cid, td, ta in comps:
+        p += bytes([cid, (td << 4) | ta])
+    p += bytes([0, 63, 0])
+    return _seg(0xDA, p)
+
+
+_APP0 = _seg(0xE0, b"JFIF\x00\x01\x01\x00\x00\x01\x00\x01\x00\x00")
+
+
+def _app14_adobe(transform: int) -> bytes:
+    return _seg(0xEE, b"Adobe" + struct.pack(">HHHB", 100, 0, 0, transform))
+
+
+# ---------------------------------------------------------------- encoder
+def _encode_component_blocks(coefs: np.ndarray, dc_codes, ac_codes,
+                             bw: BitWriter, dc_pred: int) -> int:
+    zz = coefs.reshape(coefs.shape[0], 64)[:, T.ZIGZAG]
+    for blk in zz:
+        diff = int(blk[0]) - dc_pred
+        dc_pred = int(blk[0])
+        size, bits = _magnitude(diff)
+        code, length = dc_codes[size]
+        bw.write(code, length)
+        if size:
+            bw.write(bits, size)
+        run = 0
+        last_nz = np.nonzero(blk[1:])[0]
+        end = last_nz[-1] + 1 if len(last_nz) else 0
+        for k in range(1, end + 1):
+            v = int(blk[k])
+            if v == 0:
+                run += 1
+                continue
+            while run > 15:
+                code, length = ac_codes[0xF0]
+                bw.write(code, length)
+                run -= 16
+            size, bits = _magnitude(v)
+            code, length = ac_codes[(run << 4) | size]
+            bw.write(code, length)
+            bw.write(bits, size)
+            run = 0
+        if end < 63:
+            code, length = ac_codes[0x00]      # EOB
+            bw.write(code, length)
+    return dc_pred
+
+
+def encode_jpeg(rgb: np.ndarray, quality: int = 85,
+                subsampling: str = "420") -> bytes:
+    """rgb: [H, W, 3] uint8 -> baseline JFIF bytes."""
+    H, W = rgb.shape[:2]
+    qy = T.quality_scale(T.STD_LUMA_Q, quality)
+    qc = T.quality_scale(T.STD_CHROMA_Q, quality)
+    ycc = rgb_to_ycbcr(rgb)
+
+    dc_l = T.canonical_codes(T.DC_LUMA_BITS, T.DC_LUMA_VALS)
+    ac_l = T.canonical_codes(T.AC_LUMA_BITS, T.AC_LUMA_VALS)
+    dc_c = T.canonical_codes(T.DC_CHROMA_BITS, T.DC_CHROMA_VALS)
+    ac_c = T.canonical_codes(T.AC_CHROMA_BITS, T.AC_CHROMA_VALS)
+
+    bw = BitWriter()
+    if subsampling == "444":
+        img = _pad_to(ycc, 8, 8)
+        comps = [_fdct_quant(_to_blocks(img[..., i]), qy if i == 0 else qc)
+                 for i in range(3)]
+        mby, mbx = img.shape[0] // 8, img.shape[1] // 8
+        preds = [0, 0, 0]
+        for my in range(mby):
+            for mx in range(mbx):
+                bi = my * mbx + mx
+                for ci in range(3):
+                    dc, ac = (dc_l, ac_l) if ci == 0 else (dc_c, ac_c)
+                    preds[ci] = _encode_component_blocks(
+                        comps[ci][bi:bi + 1], dc, ac, bw, preds[ci])
+        sof = _sof0(H, W, [(1, 1, 1, 0), (2, 1, 1, 1), (3, 1, 1, 1)])
+    elif subsampling == "420":
+        img = _pad_to(ycc, 16, 16)
+        y = img[..., 0]
+        cb = img[..., 1].reshape(img.shape[0] // 2, 2,
+                                 img.shape[1] // 2, 2).mean(axis=(1, 3))
+        cr = img[..., 2].reshape(img.shape[0] // 2, 2,
+                                 img.shape[1] // 2, 2).mean(axis=(1, 3))
+        yb = _fdct_quant(_to_blocks(y), qy)
+        cbb = _fdct_quant(_to_blocks(cb), qc)
+        crb = _fdct_quant(_to_blocks(cr), qc)
+        mby, mbx = img.shape[0] // 16, img.shape[1] // 16
+        ybx = img.shape[1] // 8
+        preds = [0, 0, 0]
+        for my in range(mby):
+            for mx in range(mbx):
+                for dy in range(2):
+                    for dx in range(2):
+                        bi = (2 * my + dy) * ybx + 2 * mx + dx
+                        preds[0] = _encode_component_blocks(
+                            yb[bi:bi + 1], dc_l, ac_l, bw, preds[0])
+                ci = my * (mbx) + mx
+                preds[1] = _encode_component_blocks(
+                    cbb[ci:ci + 1], dc_c, ac_c, bw, preds[1])
+                preds[2] = _encode_component_blocks(
+                    crb[ci:ci + 1], dc_c, ac_c, bw, preds[2])
+        sof = _sof0(H, W, [(1, 2, 2, 0), (2, 1, 1, 1), (3, 1, 1, 1)])
+    else:
+        raise ValueError(subsampling)
+
+    out = b"\xff\xd8" + _APP0 + _dqt(0, qy) + _dqt(1, qc) + sof
+    out += _dht(0, 0, T.DC_LUMA_BITS, T.DC_LUMA_VALS)
+    out += _dht(1, 0, T.AC_LUMA_BITS, T.AC_LUMA_VALS)
+    out += _dht(0, 1, T.DC_CHROMA_BITS, T.DC_CHROMA_VALS)
+    out += _dht(1, 1, T.AC_CHROMA_BITS, T.AC_CHROMA_VALS)
+    out += _sos([(1, 0, 0), (2, 1, 1), (3, 1, 1)])
+    out += bw.flush() + b"\xff\xd9"
+    return out
+
+
+def encode_jpeg_ycck(rgb: np.ndarray, quality: int = 85) -> bytes:
+    """The rare mode: 4-component Adobe YCCK (APP14 transform=2), 4:4:4.
+
+    Strict decoders (the ajpegli/jpeg4py/kornia-rs/turbojpeg analogues)
+    reject this; tolerant decoders invert YCCK->CMYK->RGB.
+    """
+    H, W = rgb.shape[:2]
+    # RGB -> CMYK (naive) -> YCCK: Y/Cb/Cr of (255-C,255-M,255-Y'), K plane
+    rgbf = rgb.astype(np.float64)
+    k = 255.0 - rgbf.max(axis=-1)
+    denom = np.maximum(255.0 - k, 1e-6)
+    c = (255.0 - rgbf[..., 0] - k) / denom * 255.0
+    m = (255.0 - rgbf[..., 1] - k) / denom * 255.0
+    yl = (255.0 - rgbf[..., 2] - k) / denom * 255.0
+    inv = np.stack([255.0 - c, 255.0 - m, 255.0 - yl], axis=-1)
+    ycc = rgb_to_ycbcr(np.clip(inv, 0, 255))
+    four = np.concatenate([ycc, k[..., None]], axis=-1)
+
+    qy = T.quality_scale(T.STD_LUMA_Q, quality)
+    qc = T.quality_scale(T.STD_CHROMA_Q, quality)
+    img = _pad_to(four, 8, 8)
+    qsel = [qy, qc, qc, qy]
+    comps = [_fdct_quant(_to_blocks(img[..., i]), qsel[i]) for i in range(4)]
+
+    dc_l = T.canonical_codes(T.DC_LUMA_BITS, T.DC_LUMA_VALS)
+    ac_l = T.canonical_codes(T.AC_LUMA_BITS, T.AC_LUMA_VALS)
+    dc_c = T.canonical_codes(T.DC_CHROMA_BITS, T.DC_CHROMA_VALS)
+    ac_c = T.canonical_codes(T.AC_CHROMA_BITS, T.AC_CHROMA_VALS)
+    bw = BitWriter()
+    mby, mbx = img.shape[0] // 8, img.shape[1] // 8
+    preds = [0, 0, 0, 0]
+    tsel = [(dc_l, ac_l), (dc_c, ac_c), (dc_c, ac_c), (dc_l, ac_l)]
+    for my in range(mby):
+        for mx in range(mbx):
+            bi = my * mbx + mx
+            for ci in range(4):
+                dc, ac = tsel[ci]
+                preds[ci] = _encode_component_blocks(
+                    comps[ci][bi:bi + 1], dc, ac, bw, preds[ci])
+
+    sof = _sof0(H, W, [(1, 1, 1, 0), (2, 1, 1, 1), (3, 1, 1, 1),
+                       (4, 1, 1, 0)])
+    out = b"\xff\xd8" + _app14_adobe(2) + _dqt(0, qy) + _dqt(1, qc) + sof
+    out += _dht(0, 0, T.DC_LUMA_BITS, T.DC_LUMA_VALS)
+    out += _dht(1, 0, T.AC_LUMA_BITS, T.AC_LUMA_VALS)
+    out += _dht(0, 1, T.DC_CHROMA_BITS, T.DC_CHROMA_VALS)
+    out += _dht(1, 1, T.AC_CHROMA_BITS, T.AC_CHROMA_VALS)
+    out += _sos([(1, 0, 0), (2, 1, 1), (3, 1, 1), (4, 0, 0)])
+    out += bw.flush() + b"\xff\xd9"
+    return out

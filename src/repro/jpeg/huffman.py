@@ -1,0 +1,118 @@
+"""Entropy (Huffman) decode: scan bytes -> per-component DCT coefficients.
+
+This stage is inherently bit-serial (each symbol's position depends on the
+previous), so it runs on the host CPU — mirroring the paper's CPU-decode
+scope; the parallel transform stages (dequant/IDCT/color) are JAX/Pallas.
+Decode uses 16-bit-window LUTs (libjpeg-style) rather than per-bit walks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.jpeg import tables as T
+from repro.jpeg.parser import CorruptJpeg, DecodeSpec
+
+
+class BitReader:
+    __slots__ = ("data", "pos", "acc", "nbits", "n")
+
+    def __init__(self, data: bytes):
+        # destuff 0xFF00 -> 0xFF (no restart markers in our streams)
+        self.data = data.replace(b"\xff\x00", b"\xff")
+        self.n = len(self.data)
+        self.pos = 0
+        self.acc = 0
+        self.nbits = 0
+
+    def peek16(self) -> int:
+        while self.nbits < 16:
+            b = self.data[self.pos] if self.pos < self.n else 0
+            self.pos += 1
+            self.acc = ((self.acc << 8) | b) & 0xFFFFFF
+            self.nbits += 8
+        return (self.acc >> (self.nbits - 16)) & 0xFFFF
+
+    def drop(self, k: int) -> None:
+        self.nbits -= k
+
+    def get(self, k: int) -> int:
+        if k == 0:
+            return 0
+        while self.nbits < k:
+            b = self.data[self.pos] if self.pos < self.n else 0
+            self.pos += 1
+            self.acc = ((self.acc << 8) | b) & 0xFFFFFF
+            self.nbits += 8
+        v = (self.acc >> (self.nbits - k)) & ((1 << k) - 1)
+        self.nbits -= k
+        return v
+
+
+def _extend(bits: int, size: int) -> int:
+    if size == 0:
+        return 0
+    if bits < (1 << (size - 1)):
+        return bits - (1 << size) + 1
+    return bits
+
+
+def decode_coefficients(spec: DecodeSpec) -> Dict[int, np.ndarray]:
+    """-> {cid: int32 [by, bx, 8, 8] natural-order coefficient blocks}
+    (by/bx = MCU-padded component block grid)."""
+    luts = {key: T.decode_lut(bits, vals)
+            for key, (bits, vals) in spec.htables.items()}
+    hmax = max(c.h for c in spec.components)
+    vmax = max(c.v for c in spec.components)
+    mcu_cols = (spec.width + 8 * hmax - 1) // (8 * hmax)
+    mcu_rows = (spec.height + 8 * vmax - 1) // (8 * vmax)
+
+    out: Dict[int, np.ndarray] = {}
+    for c in spec.components:
+        out[c.cid] = np.zeros((mcu_rows * c.v, mcu_cols * c.h, 64),
+                              dtype=np.int32)
+
+    br = BitReader(spec.scan_data)
+    preds = {c.cid: 0 for c in spec.components}
+    inv_zz = T.ZIGZAG  # zigzag index i -> natural position
+
+    for my in range(mcu_rows):
+        for mx in range(mcu_cols):
+            for c in spec.components:
+                dc_sym, dc_len = luts[(0, c.td)]
+                ac_sym, ac_len = luts[(1, c.ta)]
+                for dy in range(c.v):
+                    for dx in range(c.h):
+                        blk = np.zeros(64, dtype=np.int32)
+                        w = br.peek16()
+                        s = int(dc_sym[w])
+                        if s < 0:
+                            raise CorruptJpeg("bad DC code")
+                        br.drop(int(dc_len[w]))
+                        diff = _extend(br.get(s), s)
+                        preds[c.cid] += diff
+                        blk[0] = preds[c.cid]
+                        k = 1
+                        while k < 64:
+                            w = br.peek16()
+                            rs = int(ac_sym[w])
+                            if rs < 0:
+                                raise CorruptJpeg("bad AC code")
+                            br.drop(int(ac_len[w]))
+                            if rs == 0:          # EOB
+                                break
+                            if rs == 0xF0:       # ZRL
+                                k += 16
+                                continue
+                            k += rs >> 4
+                            size = rs & 0xF
+                            if k > 63:
+                                raise CorruptJpeg("AC run overflow")
+                            blk[inv_zz[k]] = _extend(br.get(size), size)
+                            k += 1
+                        out[c.cid][my * c.v + dy, mx * c.h + dx] = blk
+    for c in spec.components:
+        by, bx, _ = out[c.cid].shape
+        out[c.cid] = out[c.cid].reshape(by, bx, 8, 8)
+    return out

@@ -1,0 +1,141 @@
+"""JPEG segment parser: headers -> DecodeSpec (+ strictness signals)."""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.jpeg import tables as T
+
+
+class UnsupportedJpeg(Exception):
+    """Raised by strict decode paths on rare JPEG modes (the paper's
+    skip-accounting case)."""
+
+
+class CorruptJpeg(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Component:
+    cid: int
+    h: int               # horizontal sampling factor
+    v: int
+    tq: int              # quant table id
+    td: int = 0          # DC huffman table id
+    ta: int = 0          # AC huffman table id
+
+
+@dataclasses.dataclass
+class DecodeSpec:
+    height: int
+    width: int
+    components: List[Component]
+    qtables: Dict[int, np.ndarray]              # natural order [8,8]
+    htables: Dict[Tuple[int, int], Tuple[list, list]]  # (tc,th)->(bits,vals)
+    scan_data: bytes
+    progressive: bool = False
+    adobe_transform: Optional[int] = None
+    precision: int = 8
+
+    @property
+    def mcu_h(self) -> int:
+        return 8 * max(c.v for c in self.components)
+
+    @property
+    def mcu_w(self) -> int:
+        return 8 * max(c.h for c in self.components)
+
+
+def parse(data: bytes) -> DecodeSpec:
+    if data[:2] != b"\xff\xd8":
+        raise CorruptJpeg("missing SOI")
+    i = 2
+    qtables: Dict[int, np.ndarray] = {}
+    htables: Dict[Tuple[int, int], Tuple[list, list]] = {}
+    comps: List[Component] = []
+    H = W = 0
+    progressive = False
+    adobe = None
+    precision = 8
+    scan = b""
+    n = len(data)
+    while i < n:
+        if data[i] != 0xFF:
+            raise CorruptJpeg(f"marker expected at {i}")
+        marker = data[i + 1]
+        i += 2
+        if marker == 0xD9:       # EOI
+            break
+        if marker in (0x01,) or 0xD0 <= marker <= 0xD7:
+            continue
+        (length,) = struct.unpack(">H", data[i:i + 2])
+        payload = data[i + 2:i + length]
+        i += length
+        if marker == 0xDB:       # DQT
+            j = 0
+            while j < len(payload):
+                pq, tq = payload[j] >> 4, payload[j] & 0xF
+                j += 1
+                if pq:
+                    raise UnsupportedJpeg("16-bit quant tables")
+                zz = np.frombuffer(payload[j:j + 64], dtype=np.uint8)
+                j += 64
+                nat = np.zeros(64, np.int32)
+                nat[T.ZIGZAG] = zz
+                qtables[tq] = nat.reshape(8, 8)
+        elif marker in (0xC0, 0xC1, 0xC2):     # SOF0/1/2
+            progressive = marker == 0xC2
+            precision = payload[0]
+            H, W = struct.unpack(">HH", payload[1:5])
+            nc = payload[5]
+            comps = []
+            for k in range(nc):
+                cid, hv, tq = payload[6 + 3 * k:9 + 3 * k]
+                comps.append(Component(cid, hv >> 4, hv & 0xF, tq))
+        elif marker == 0xC4:     # DHT
+            j = 0
+            while j < len(payload):
+                tc, th = payload[j] >> 4, payload[j] & 0xF
+                bits = [0] + list(payload[j + 1:j + 17])
+                nv = sum(bits)
+                vals = list(payload[j + 17:j + 17 + nv])
+                htables[(tc, th)] = (bits, vals)
+                j += 17 + nv
+        elif marker == 0xEE and payload[:5] == b"Adobe":
+            adobe = payload[11]
+        elif marker == 0xDA:     # SOS
+            ns = payload[0]
+            for k in range(ns):
+                cid, tt = payload[1 + 2 * k:3 + 2 * k]
+                for c in comps:
+                    if c.cid == cid:
+                        c.td, c.ta = tt >> 4, tt & 0xF
+            # entropy data runs until next non-RST marker
+            j = i
+            while j < n - 1:
+                if data[j] == 0xFF and data[j + 1] not in (0x00,) \
+                        and not (0xD0 <= data[j + 1] <= 0xD7):
+                    break
+                j += 1
+            scan = data[i:j]
+            i = j
+    if not comps or not scan:
+        raise CorruptJpeg("no frame/scan")
+    return DecodeSpec(H, W, comps, qtables, htables, scan,
+                      progressive=progressive, adobe_transform=adobe,
+                      precision=precision)
+
+
+def check_strict(spec: DecodeSpec) -> None:
+    """The strict-decoder policy: reject the rare modes (paper section 4.4:
+    'uncommon color-transform/four-channel JPEG case')."""
+    if spec.progressive:
+        raise UnsupportedJpeg("progressive scan")
+    if len(spec.components) == 4 or (spec.adobe_transform or 0) == 2:
+        raise UnsupportedJpeg("4-component / Adobe YCCK color transform")
+    if spec.precision != 8:
+        raise UnsupportedJpeg("non-8-bit precision")

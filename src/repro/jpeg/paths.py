@@ -1,0 +1,240 @@
+"""The thirteen decode paths (the paper's thirteen decoder analogues).
+
+Every path is bytes -> RGB uint8 [H, W, 3] over the same codec substrate,
+differing in transform engine (numpy / jnp / Pallas), fusion/jit level,
+arithmetic (float vs fixed-point vs FFT), and robustness policy (strict
+paths reject the rare Adobe-YCCK mode => skip accounting). Mirrors the
+paper's evaluation surface:
+
+  name            engine    notes                                   strict
+  numpy-ref       numpy     separable float IDCT (oracle)           no
+  numpy-fast      numpy     Kronecker 64x64 GEMM IDCT               no
+  numpy-int       numpy     13-bit fixed-point IDCT (libjpeg-ish)   no
+  jnp-basic       jnp       eager per-stage dispatch                no
+  jnp-jit         jnp       jit, separable IDCT                     no
+  jnp-fused       jnp       jit, single fused transform             no
+  jnp-batched     jnp       fused + reused compilation cache        no
+  fft-idct        numpy     IDCT via FFT (scipy-free, skimage-ish)  no
+  pallas-idct     pallas    IDCT kernel (interpret on CPU)          no
+  pallas-fused    pallas    fused dequant+IDCT+color kernels        no
+  strict-turbo    jnp       jnp-fused + strict policy               yes
+  strict-fast     numpy     numpy-fast + strict policy              yes
+  strict-pallas   pallas    pallas-idct + strict policy             yes
+
+Process-pool loader eligibility: jax/pallas-backed paths are thread-loader
+only (jax runtime does not survive fork/spawn workers cheaply) — the
+analogue of the paper's "PyVips is not loader-eligible under this forked
+harness".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.jpeg import huffman, pipeline
+from repro.jpeg import parser as P
+from repro.jpeg.parser import UnsupportedJpeg
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePath:
+    name: str
+    fn: Callable[[bytes], np.ndarray]
+    strict: bool = False
+    process_eligible: bool = True     # usable in process-pool workers
+    engine: str = "numpy"             # numpy | jnp | pallas
+    description: str = ""
+
+    def decode(self, data: bytes) -> np.ndarray:
+        return self.fn(data)
+
+
+def _entropy(data: bytes, strict: bool):
+    spec = P.parse(data)
+    if strict:
+        P.check_strict(spec)
+    coef = huffman.decode_coefficients(spec)
+    return spec, coef
+
+
+# ------------------------------------------------------------ numpy family
+def _numpy_ref(data: bytes) -> np.ndarray:
+    spec, coef = _entropy(data, False)
+    return pipeline.transform_np(spec, coef, fast_idct=False)
+
+
+def _numpy_fast(data: bytes, strict: bool = False) -> np.ndarray:
+    spec, coef = _entropy(data, strict)
+    return pipeline.transform_np(spec, coef, fast_idct=True)
+
+
+def _numpy_int(data: bytes) -> np.ndarray:
+    spec, coef = _entropy(data, False)
+    return pipeline.transform_np(spec, coef, int_idct=True)
+
+
+def _numpy_sparse(data: bytes) -> np.ndarray:
+    spec, coef = _entropy(data, False)
+    return pipeline.transform_np(spec, coef, sparse_idct=True)
+
+
+def _fft_idct(data: bytes) -> np.ndarray:
+    spec, coef = _entropy(data, False)
+    # IDCT-II via FFT (type-III DCT through complex FFT), scipy-free
+    import numpy.fft as fft
+
+    def idct1(x, axis):
+        n = x.shape[axis]
+        k = np.arange(n).reshape([-1 if i == axis % x.ndim else 1
+                                  for i in range(x.ndim)])
+        w = np.exp(1j * np.pi * k / (2 * n))
+        xw = x * w * np.sqrt(2 * n)
+        xw0 = np.take(x, [0], axis=axis) * (np.sqrt(n) - np.sqrt(2 * n))
+        xw = xw + xw0 * (k == 0)
+        full = fft.ifft(xw, n=n, axis=axis)
+        v = np.real(full)
+        idx = np.empty(n, dtype=np.int64)
+        idx[::2] = np.arange((n + 1) // 2)
+        idx[1::2] = np.arange(n - 1, n // 2 - 1, -1)
+        return np.take(v, idx, axis=axis)
+
+    hmax = max(c.h for c in spec.components)
+    vmax = max(c.v for c in spec.components)
+    planes = []
+    for c in spec.components:
+        q = spec.qtables[c.tq].astype(np.float64)
+        deq = coef[c.cid] * q[None, None]
+        blocks = idct1(idct1(deq, axis=2), axis=3)
+        plane = pipeline.assemble_plane_np(blocks) + 128.0
+        planes.append(pipeline.upsample_np(plane, hmax // c.h, vmax // c.v))
+    hh = min(p.shape[0] for p in planes)
+    ww = min(p.shape[1] for p in planes)
+    planes = [p[:hh, :ww] for p in planes]
+    if len(planes) == 1:
+        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
+    elif len(planes) == 3:
+        rgb = pipeline.ycbcr_to_rgb_np(*planes)
+    else:
+        rgb = pipeline.ycck_to_rgb_np(*planes)
+    return pipeline.finalize_np(rgb, spec.height, spec.width)
+
+
+# ------------------------------------------------------------ jnp family
+def _jnp_basic(data: bytes) -> np.ndarray:
+    spec, coef = _entropy(data, False)
+    return pipeline.transform_jnp(spec, coef, jit=False)
+
+
+def _jnp_jit(data: bytes) -> np.ndarray:
+    spec, coef = _entropy(data, False)
+    return pipeline.transform_jnp(spec, coef, jit=True, separable=True)
+
+
+def _jnp_fused(data: bytes, strict: bool = False) -> np.ndarray:
+    spec, coef = _entropy(data, strict)
+    return pipeline.transform_jnp(spec, coef, jit=True, separable=False)
+
+
+# ------------------------------------------------------------ pallas family
+def _pallas_idct(data: bytes, strict: bool = False) -> np.ndarray:
+    from repro.kernels import ops
+    spec, coef = _entropy(data, strict)
+    hmax = max(c.h for c in spec.components)
+    vmax = max(c.v for c in spec.components)
+    planes = []
+    for c in spec.components:
+        q = spec.qtables[c.tq].astype(np.float32)
+        deq = (coef[c.cid] * q[None, None]).astype(np.float32)
+        by, bx = deq.shape[:2]
+        blocks = ops.idct8x8(deq.reshape(-1, 64)).reshape(by, bx, 8, 8)
+        plane = pipeline.assemble_plane_np(np.asarray(blocks)) + 128.0
+        planes.append(pipeline.upsample_np(plane, hmax // c.h, vmax // c.v))
+    hh = min(p.shape[0] for p in planes)
+    ww = min(p.shape[1] for p in planes)
+    planes = [p[:hh, :ww] for p in planes]
+    if len(planes) == 1:
+        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
+    elif len(planes) == 3:
+        rgb = pipeline.ycbcr_to_rgb_np(*planes)
+    else:
+        rgb = pipeline.ycck_to_rgb_np(*planes)
+    return pipeline.finalize_np(rgb, spec.height, spec.width)
+
+
+def _pallas_fused(data: bytes) -> np.ndarray:
+    from repro.kernels import ops
+    spec, coef = _entropy(data, False)
+    hmax = max(c.h for c in spec.components)
+    vmax = max(c.v for c in spec.components)
+    planes = []
+    for c in spec.components:
+        q = spec.qtables[c.tq].astype(np.float32)
+        by, bx = coef[c.cid].shape[:2]
+        blocks = ops.dequant_idct(
+            coef[c.cid].reshape(-1, 64).astype(np.float32), q.reshape(64))
+        plane = pipeline.assemble_plane_np(
+            np.asarray(blocks).reshape(by, bx, 8, 8))
+        planes.append(pipeline.upsample_np(plane, hmax // c.h, vmax // c.v))
+    hh = min(p.shape[0] for p in planes)
+    ww = min(p.shape[1] for p in planes)
+    planes = [p[:hh, :ww] for p in planes]
+    if len(planes) == 3:
+        rgb = np.asarray(ops.ycbcr2rgb(planes[0], planes[1], planes[2]))
+    elif len(planes) == 1:
+        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
+    else:
+        rgb = pipeline.ycck_to_rgb_np(*planes)
+    return pipeline.finalize_np(rgb.astype(np.float64), spec.height,
+                                spec.width)
+
+
+DECODE_PATHS: Dict[str, DecodePath] = {}
+
+
+def _register(name, fn, **kw):
+    DECODE_PATHS[name] = DecodePath(name=name, fn=fn, **kw)
+
+
+_register("numpy-ref", _numpy_ref, engine="numpy",
+          description="separable float IDCT, reference oracle")
+_register("numpy-fast", lambda d: _numpy_fast(d, False), engine="numpy",
+          description="Kronecker 64x64 GEMM IDCT")
+_register("numpy-int", _numpy_int, engine="numpy",
+          description="13-bit fixed-point IDCT")
+_register("jnp-basic", _jnp_basic, engine="jnp", process_eligible=False,
+          description="eager per-stage jnp dispatch")
+_register("jnp-jit", _jnp_jit, engine="jnp", process_eligible=False,
+          description="jit, separable IDCT")
+_register("jnp-fused", lambda d: _jnp_fused(d, False), engine="jnp",
+          process_eligible=False,
+          description="jit, fused whole-image transform")
+_register("jnp-batched", lambda d: _jnp_fused(d, False), engine="jnp",
+          process_eligible=False,
+          description="fused + warm compile cache (bucketed shapes)")
+_register("fft-idct", _fft_idct, engine="numpy",
+          description="IDCT via FFT (skimage-style)")
+_register("pallas-idct", lambda d: _pallas_idct(d, False), engine="pallas",
+          process_eligible=False,
+          description="Pallas IDCT kernel (interpret on CPU; MXU on TPU)")
+_register("pallas-fused", _pallas_fused, engine="pallas",
+          process_eligible=False,
+          description="fused Pallas dequant+IDCT + color kernels")
+_register("strict-turbo", lambda d: _jnp_fused(d, True), engine="jnp",
+          strict=True, process_eligible=False,
+          description="jnp-fused + strict JPEG-mode policy")
+_register("strict-fast", lambda d: _numpy_fast(d, True), engine="numpy",
+          strict=True,
+          description="numpy-fast + strict JPEG-mode policy")
+_register("strict-pallas", lambda d: _pallas_idct(d, True), engine="pallas",
+          strict=True, process_eligible=False,
+          description="pallas-idct + strict JPEG-mode policy")
+# 14th path — beyond-paper optimization (EXPERIMENTS.md §Perf): DC-shortcut
+# IDCT, GEMM only blocks with AC energy.
+_register("numpy-sparse", _numpy_sparse, engine="numpy",
+          description="DC-shortcut sparse IDCT (beyond-paper)")
+
+
+def get_path(name: str) -> DecodePath:
+    return DECODE_PATHS[name]

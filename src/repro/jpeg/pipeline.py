@@ -1,0 +1,220 @@
+"""Post-entropy decode stages: dequant -> IDCT -> upsample -> color -> RGB.
+
+Dual implementations: numpy (reference) and jnp (jit-able); the Pallas
+kernels in repro.kernels implement the same stages with explicit VMEM
+tiling. All decode paths share these building blocks.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.jpeg import tables as T
+from repro.jpeg.parser import DecodeSpec
+
+_IDCT64 = T.idct64_matrix().astype(np.float32)    # [64, 64] kron(C.T, C.T)
+
+
+# ------------------------------------------------------------------ numpy
+def idct_blocks_np(coefs: np.ndarray) -> np.ndarray:
+    """[by, bx, 8, 8] dequantized -> spatial blocks (separable matrix IDCT)."""
+    c = T.dct_matrix().astype(np.float64)
+    return np.einsum("ik,...kl,jl->...ij", c.T, coefs.astype(np.float64), c.T)
+
+
+def idct_blocks_np_fast(coefs: np.ndarray) -> np.ndarray:
+    """Kronecker 64x64 single-GEMM IDCT (batched across blocks)."""
+    by, bx = coefs.shape[:2]
+    flat = coefs.reshape(-1, 64).astype(np.float32)
+    return (flat @ _IDCT64.T).reshape(by, bx, 8, 8)
+
+
+def idct_blocks_np_sparse(coefs: np.ndarray) -> np.ndarray:
+    """DC-shortcut IDCT (beyond-paper live optimization, §Perf):
+
+    At photographic quantization levels a large fraction of blocks carry
+    only a DC coefficient; their IDCT is the constant DC/8. GEMM only the
+    blocks with AC energy (libjpeg applies the same idea per-row)."""
+    by, bx = coefs.shape[:2]
+    flat = coefs.reshape(-1, 64).astype(np.float32)
+    has_ac = np.any(flat[:, 1:] != 0.0, axis=1)
+    out = np.empty_like(flat)
+    out[:] = (flat[:, :1] / 8.0)               # DC-only blocks: constant
+    if has_ac.any():
+        out[has_ac] = flat[has_ac] @ _IDCT64.T
+    return out.reshape(by, bx, 8, 8)
+
+
+def assemble_plane_np(blocks: np.ndarray) -> np.ndarray:
+    by, bx = blocks.shape[:2]
+    return blocks.transpose(0, 2, 1, 3).reshape(by * 8, bx * 8)
+
+
+def upsample_np(plane: np.ndarray, fh: int, fv: int) -> np.ndarray:
+    if fh == 1 and fv == 1:
+        return plane
+    return np.repeat(np.repeat(plane, fv, axis=0), fh, axis=1)
+
+
+def ycbcr_to_rgb_np(y, cb, cr) -> np.ndarray:
+    r = y + 1.402 * (cr - 128.0)
+    g = y - 0.344136 * (cb - 128.0) - 0.714136 * (cr - 128.0)
+    b = y + 1.772 * (cb - 128.0)
+    return np.stack([r, g, b], axis=-1)
+
+
+def ycck_to_rgb_np(y, cb, cr, k) -> np.ndarray:
+    inv = ycbcr_to_rgb_np(y, cb, cr)           # = 255 - CMY
+    cmy = 255.0 - inv
+    kk = k[..., None]
+    rgb = (255.0 - np.clip(cmy, 0, 255)) * (255.0 - np.clip(kk, 0, 255)) \
+        / 255.0
+    return rgb
+
+
+def finalize_np(rgb: np.ndarray, h: int, w: int) -> np.ndarray:
+    return np.clip(np.round(rgb[:h, :w]), 0, 255).astype(np.uint8)
+
+
+# ------------------------------------------------------------------ jnp
+def dequant_jnp(coefs, qtable):
+    return coefs.astype(jnp.float32) * qtable.astype(jnp.float32)
+
+
+def idct_blocks_jnp(deq):
+    """[by,bx,8,8] -> spatial via Kronecker GEMM (MXU-friendly form)."""
+    by, bx = deq.shape[:2]
+    flat = deq.reshape(-1, 64)
+    m = jnp.asarray(_IDCT64)
+    return (flat @ m.T).reshape(by, bx, 8, 8)
+
+
+def idct_blocks_jnp_separable(deq):
+    c = jnp.asarray(T.dct_matrix().astype(np.float32))
+    return jnp.einsum("ik,...kl,jl->...ij", c.T, deq, c.T)
+
+
+def assemble_plane_jnp(blocks):
+    by, bx = blocks.shape[:2]
+    return blocks.transpose(0, 2, 1, 3).reshape(by * 8, bx * 8)
+
+
+def upsample_jnp(plane, fh: int, fv: int):
+    if fh == 1 and fv == 1:
+        return plane
+    return jnp.repeat(jnp.repeat(plane, fv, axis=0), fh, axis=1)
+
+
+def ycbcr_to_rgb_jnp(y, cb, cr):
+    r = y + 1.402 * (cr - 128.0)
+    g = y - 0.344136 * (cb - 128.0) - 0.714136 * (cr - 128.0)
+    b = y + 1.772 * (cb - 128.0)
+    return jnp.stack([r, g, b], axis=-1)
+
+
+def ycck_to_rgb_jnp(y, cb, cr, k):
+    inv = ycbcr_to_rgb_jnp(y, cb, cr)
+    cmy = 255.0 - inv
+    kk = k[..., None]
+    return (255.0 - jnp.clip(cmy, 0, 255)) * (255.0 - jnp.clip(kk, 0, 255)) \
+        / 255.0
+
+
+def finalize_jnp(rgb, h: int, w: int):
+    return jnp.clip(jnp.round(rgb[:h, :w]), 0, 255).astype(jnp.uint8)
+
+
+# -------------------------------------------------- whole-image transforms
+def transform_np(spec: DecodeSpec, coef: Dict[int, np.ndarray],
+                 fast_idct: bool = True, int_idct: bool = False,
+                 sparse_idct: bool = False) -> np.ndarray:
+    hmax = max(c.h for c in spec.components)
+    vmax = max(c.v for c in spec.components)
+    planes = []
+    for c in spec.components:
+        q = spec.qtables[c.tq].astype(np.float64)
+        deq = coef[c.cid] * q[None, None]
+        if sparse_idct:
+            blocks = idct_blocks_np_sparse(deq)
+        elif int_idct:
+            # libjpeg-islow-style scaled integer IDCT (13-bit fixed point)
+            m = np.round(_IDCT64 * (1 << 13)).astype(np.int64)
+            flat = deq.reshape(-1, 64).astype(np.int64)
+            blocks = ((flat @ m.T) >> 13).reshape(deq.shape).astype(np.float64)
+        elif fast_idct:
+            blocks = idct_blocks_np_fast(deq)
+        else:
+            blocks = idct_blocks_np(deq)
+        plane = assemble_plane_np(blocks) + 128.0
+        planes.append(upsample_np(plane, hmax // c.h, vmax // c.v))
+    hh = min(p.shape[0] for p in planes)
+    ww = min(p.shape[1] for p in planes)
+    planes = [p[:hh, :ww] for p in planes]
+    if len(planes) == 1:
+        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
+    elif len(planes) == 3:
+        rgb = ycbcr_to_rgb_np(*planes)
+    else:
+        rgb = ycck_to_rgb_np(*planes)
+    return finalize_np(rgb, spec.height, spec.width)
+
+
+@partial(jax.jit, static_argnames=("n_comp", "factors", "h", "w",
+                                   "separable"))
+def _transform_jit(coefs, qtables, *, n_comp, factors, h, w, separable):
+    planes = []
+    for i in range(n_comp):
+        deq = dequant_jnp(coefs[i], qtables[i])
+        blocks = (idct_blocks_jnp_separable(deq) if separable
+                  else idct_blocks_jnp(deq))
+        plane = assemble_plane_jnp(blocks) + 128.0
+        fh, fv = factors[i]
+        planes.append(upsample_jnp(plane, fh, fv))
+    hh = min(p.shape[0] for p in planes)
+    ww = min(p.shape[1] for p in planes)
+    planes = [p[:hh, :ww] for p in planes]
+    if n_comp == 1:
+        rgb = jnp.repeat(planes[0][..., None], 3, axis=-1)
+    elif n_comp == 3:
+        rgb = ycbcr_to_rgb_jnp(*planes)
+    else:
+        rgb = ycck_to_rgb_jnp(*planes)
+    return finalize_jnp(rgb, h, w)
+
+
+def transform_jnp(spec: DecodeSpec, coef: Dict[int, np.ndarray],
+                  jit: bool = True, separable: bool = False) -> np.ndarray:
+    hmax = max(c.h for c in spec.components)
+    vmax = max(c.v for c in spec.components)
+    coefs = tuple(jnp.asarray(coef[c.cid], jnp.float32)
+                  for c in spec.components)
+    qts = tuple(jnp.asarray(spec.qtables[c.tq], jnp.float32)
+                for c in spec.components)
+    factors = tuple((hmax // c.h, vmax // c.v) for c in spec.components)
+    if jit:
+        out = _transform_jit(coefs, qts, n_comp=len(coefs), factors=factors,
+                             h=spec.height, w=spec.width,
+                             separable=separable)
+        return np.asarray(out)
+    # unjitted: eager stage-by-stage dispatch (the "wrapper overhead" path)
+    planes = []
+    for i, c in enumerate(spec.components):
+        deq = dequant_jnp(coefs[i], qts[i])
+        blocks = (idct_blocks_jnp_separable(deq) if separable
+                  else idct_blocks_jnp(deq))
+        plane = assemble_plane_jnp(blocks) + 128.0
+        planes.append(upsample_jnp(plane, *factors[i]))
+    hh = min(p.shape[0] for p in planes)
+    ww = min(p.shape[1] for p in planes)
+    planes = [p[:hh, :ww] for p in planes]
+    if len(planes) == 1:
+        rgb = jnp.repeat(planes[0][..., None], 3, axis=-1)
+    elif len(planes) == 3:
+        rgb = ycbcr_to_rgb_jnp(*planes)
+    else:
+        rgb = ycck_to_rgb_jnp(*planes)
+    return np.asarray(finalize_jnp(rgb, spec.height, spec.width))

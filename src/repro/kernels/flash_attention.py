@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused (flash-style) causal attention forward.
+
+Beyond-paper optimization backing the roofline hillclimb's ``vmem_flash``
+accounting (EXPERIMENTS.md §Perf): the jnp chunked attention materializes
+O(S^2) f32 score/probability blocks in HBM — the dominant memory-roofline
+term for every *train_4k/prefill* cell. This kernel keeps the entire
+score->softmax->PV pipeline in VMEM.
+
+Tiling: grid over (batch*kv_head*rep, S/BLK_Q). Per grid step, a
+(BLK_Q, D) query tile meets the full (S, D) K/V slabs in VMEM and writes one
+(BLK_Q, D) output tile. VMEM budget at S=4096, D=128, BLK_Q=512:
+K+V 4 MiB (bf16) + scores 8 MiB (f32) + tiles < 16 MiB — well under the
+~128 MiB budget; for S beyond ~16k, wrap with an outer KV loop (the jnp
+layer already chunks at that scale).
+
+Validated in interpret mode against ref.flash_attention (tests/test_kernels
+sweep shapes + dtypes); Mosaic lowers the same code on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_Q = 512
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool,
+                  scale: float, blk_q: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (blk_q, D)
+    k = k_ref[0].astype(jnp.float32)                  # (S, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_idx = qi * blk_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        k_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_idx <= q_idx, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.dot((p / l).astype(v_ref.dtype).astype(jnp.float32), v,
+                preferred_element_type=jnp.float32)
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "interpret", "blk_q"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, interpret: bool = False,
+                           blk_q: int = BLK_Q) -> jax.Array:
+    """q/k/v: [BH, S, D] (heads pre-flattened, KV pre-repeated for GQA)."""
+    bh, s, d = q.shape
+    blk_q = min(blk_q, s)
+    assert s % blk_q == 0, (s, blk_q)
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, s // blk_q)
+    kernel = functools.partial(_flash_kernel, causal=causal, scale=scale,
+                               blk_q=blk_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

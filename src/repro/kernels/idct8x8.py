@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: batched 8x8 IDCT as a Kronecker-product GEMM.
+
+TPU-native adaptation of the JPEG hot loop (DESIGN.md §2): instead of the
+CPU/GPU per-block separable butterfly, the 2-D 8x8 IDCT is one constant
+[64, 64] matrix (kron(C^T, C^T)) applied to a [N, 64] batch of coefficient
+blocks — an MXU-shaped GEMM. Blocks are tiled into VMEM in (TILE_N, 64)
+slabs; the 16 KiB constant matrix is resident across the whole grid.
+
+VMEM budget per grid step (TILE_N=512): in 512*64*4 = 128 KiB, out 128 KiB,
+matrix 16 KiB — far under the ~128 MiB/core budget, sized small to overlap
+HBM streaming with MXU work across grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512
+
+
+def _idct_kernel(x_ref, m_ref, o_ref):
+    # x: (TILE_N, 64) coefficient rows; m: (64, 64) kron IDCT; o = x @ m^T
+    o_ref[...] = jnp.dot(x_ref[...], m_ref[...].T,
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def idct8x8_pallas(x: jax.Array, m: jax.Array, *,
+                   interpret: bool = False) -> jax.Array:
+    """x: [N, 64] float32 (N multiple of TILE_N); m: [64, 64] kron matrix."""
+    n = x.shape[0]
+    assert n % TILE_N == 0, n
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _idct_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, 64), lambda i: (i, 0)),
+            pl.BlockSpec((64, 64), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, 64), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 64), jnp.float32),
+        interpret=interpret,
+    )(x, m)

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: YCbCr -> RGB colorspace conversion (VPU elementwise).
+
+Planes are flattened and padded to (rows, 128) — the VPU lane width — and
+tiled (TILE_R, 128) into VMEM. Pure affine math; three outputs fused in one
+pass so Y/Cb/Cr stream through VMEM exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 256
+LANES = 128
+
+
+def _color_kernel(y_ref, cb_ref, cr_ref, r_ref, g_ref, b_ref):
+    y = y_ref[...]
+    cb = cb_ref[...] - 128.0
+    cr = cr_ref[...] - 128.0
+    r_ref[...] = y + 1.402 * cr
+    g_ref[...] = y - 0.344136 * cb - 0.714136 * cr
+    b_ref[...] = y + 1.772 * cb
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ycbcr2rgb_pallas(y: jax.Array, cb: jax.Array, cr: jax.Array, *,
+                     interpret: bool = False):
+    """y/cb/cr: [R, 128] f32, R a multiple of TILE_R -> (r, g, b) planes."""
+    rows = y.shape[0]
+    assert rows % TILE_R == 0 and y.shape[1] == LANES, y.shape
+    grid = (rows // TILE_R,)
+    spec = pl.BlockSpec((TILE_R, LANES), lambda i: (i, 0))
+    out = jax.ShapeDtypeStruct((rows, LANES), jnp.float32)
+    return pl.pallas_call(
+        _color_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        out_shape=(out, out, out),
+        interpret=interpret,
+    )(y, cb, cr)

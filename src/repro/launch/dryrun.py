@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run CLI.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes (16x16 single-pod, 2x16x16
+multi-pod) need 512 placeholder host devices. Everything else imports after.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod-only
+"""
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    from repro.configs import SHAPES, list_configs
+    from repro.launch.dryrun_lib import run_matrix
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture id (repeatable); default: all")
+    ap.add_argument("--shape", action="append", default=None,
+                    help="shape name (repeatable); default: all")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--tag", default="", help="artifact tag for perf variants")
+    ap.add_argument("--ctx", default="{}",
+                    help="JSON ModelContext overrides for perf hillclimbs")
+    args = ap.parse_args()
+
+    archs = args.arch or list_configs()
+    shapes = args.shape or list(SHAPES)
+    overrides = dict(json.loads(args.ctx), remat=args.remat)
+
+    results = []
+    if not args.multi_pod_only:
+        results += run_matrix(archs, shapes, multi_pod=False,
+                              out_dir=args.out, force=args.force,
+                              ctx_overrides=overrides, tag=args.tag)
+    if not args.single_pod_only:
+        results += run_matrix(archs, shapes, multi_pod=True,
+                              out_dir=args.out, force=args.force,
+                              ctx_overrides=overrides, tag=args.tag)
+
+    bad = [r for r in results if r["status"] == "error"]
+    ok = [r for r in results if r["status"] == "ok"]
+    skipped = [r for r in results if r["status"] == "skipped"]
+    print(f"\ndry-run: {len(ok)} ok, {len(skipped)} skipped, "
+          f"{len(bad)} errors")
+    for r in bad:
+        print(f"  ERROR {r['arch']} x {r['shape']}: {r['error'][:160]}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

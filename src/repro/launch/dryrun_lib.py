@@ -1,0 +1,226 @@
+"""Dry-run engine: lower + compile every (arch x shape x mesh) cell and
+extract memory / cost / collective artifacts for the roofline.
+
+Used by launch/dryrun.py (which sets the 512-host-device XLA flag before any
+jax import) and by the dry-run tests (small meshes in a subprocess).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import hlo as hlo_mod
+from repro.common import hw
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.distributed import sharding as shardlib
+from repro.launch import specs as speclib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.models.layers import ModelContext
+from repro.train import OptimizerConfig, make_train_step
+from repro.train.train_step import make_train_state_shapes
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               ctx_overrides: Optional[dict] = None):
+    """Returns (jitted_fn, example_args) for a cell, fully abstract."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    over = dict(ctx_overrides or {})
+    microbatch = over.pop("microbatch", 0)
+    ctx = shardlib.make_context(mesh, remat=over.pop("remat", "full"),
+                                **over)
+    baxes = shardlib.batch_axes(mesh)
+
+    params_shapes = jax.eval_shape(partial(model.init, cfg=cfg),
+                                   jax.random.PRNGKey(0))
+    pspecs = shardlib.param_specs(params_shapes, mesh, no_tp=ctx.no_tp)
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig()
+        state_shapes = make_train_state_shapes(cfg, opt_cfg)
+        state_specs = {"params": pspecs,
+                       "opt": {"mu": pspecs, "nu": pspecs},
+                       "step": P()}
+        batch_shapes = speclib.train_batch_specs(cfg, shape)
+        batch_specs = shardlib.batch_specs(mesh, batch_shapes,
+                                           axes=ctx.data_axes)
+        step_fn = make_train_step(cfg, ctx, opt_cfg, microbatch=microbatch)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(_ns(mesh, state_specs),
+                                       _ns(mesh, batch_specs)))
+        return jitted, (state_shapes, batch_shapes)
+
+    if shape.kind == "prefill":
+        inputs = speclib.prefill_inputs(cfg, shape)
+        in_sp = shardlib.batch_specs(mesh, inputs)
+
+        def prefill_fn(params, tokens, image_embeds=None):
+            return model.prefill(params, tokens, cfg, ctx,
+                                 cache_len=shape.seq_len,
+                                 image_embeds=image_embeds)
+
+        args = [params_shapes, inputs["tokens"]]
+        shards = [_ns(mesh, pspecs), _ns(mesh, in_sp["tokens"])]
+        if "image_embeds" in inputs:
+            args.append(inputs["image_embeds"])
+            shards.append(_ns(mesh, in_sp["image_embeds"]))
+        jitted = jax.jit(prefill_fn, in_shardings=tuple(shards))
+        return jitted, tuple(args)
+
+    if shape.kind == "decode":
+        inputs = speclib.decode_inputs(cfg, shape)
+        cache_sp = shardlib.cache_specs(inputs["caches"], mesh)
+        tok_sp = shardlib.batch_specs(mesh, {"t": inputs["token"]})["t"]
+
+        def decode_fn(params, caches, token, pos, image_embeds=None):
+            return model.decode_step(params, caches, token, pos, cfg, ctx,
+                                     image_embeds=image_embeds)
+
+        args = [params_shapes, inputs["caches"], inputs["token"],
+                inputs["pos"]]
+        shards = [_ns(mesh, pspecs), _ns(mesh, cache_sp), _ns(mesh, tok_sp),
+                  NamedSharding(mesh, P())]
+        if "image_embeds" in inputs:
+            args.append(inputs["image_embeds"])
+            shards.append(NamedSharding(
+                mesh, shardlib.batch_specs(
+                    mesh, {"i": inputs["image_embeds"]})["i"]))
+        jitted = jax.jit(decode_fn, in_shardings=tuple(shards))
+        return jitted, tuple(args)
+
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, ctx_overrides: Optional[dict] = None) -> Dict[str, Any]:
+    """Lower + compile one cell; return the roofline artifact dict.
+
+    ctx_overrides may carry the pseudo-key ``fused_scopes`` (list of
+    named_scope substrings) for VMEM-fused-kernel accounting in perf
+    variants; the rest override ModelContext fields."""
+    ctx_overrides = dict(ctx_overrides or {})
+    fused_scopes = tuple(ctx_overrides.pop("fused_scopes", ()))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        jitted, args = build_cell(arch, shape_name, mesh,
+                                  ctx_overrides=ctx_overrides)
+        if isinstance(args, tuple):
+            lowered = jitted.lower(*args)
+        else:
+            lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "status": "error",
+                "mesh": list(mesh.shape.values()),
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-3000:]}
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    # Loop-aware analysis (while bodies x trip count; fusion memory model):
+    # XLA's cost_analysis counts scan bodies once, so it under-reports
+    # everything by ~num_layers x for scanned models. See repro.common.hlo.
+    analysis = hlo_mod.analyze(compiled.as_text(), n_dev,
+                               fused_scopes=fused_scopes)
+    flops = analysis["flops_per_chip"]
+    bytes_accessed = analysis["hbm_bytes_per_chip"]
+    coll = {k: analysis[k] for k in
+            ("num_collectives", "total_operand_bytes",
+             "total_traffic_bytes", "by_kind")}
+
+    terms = hw.roofline_terms(flops, bytes_accessed,
+                              coll["total_traffic_bytes"])
+    mf_total = speclib.model_flops(cfg, shape)
+    mf_per_chip = mf_total / n_dev
+    result = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": {k: int(v) for k, v in mesh.shape.items()},
+        "num_devices": int(n_dev),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_hbm_proxy_bytes": (mem.argument_size_in_bytes
+                                     + mem.temp_size_in_bytes),
+            "fits_hbm": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+            < hw.TPU_V5E.hbm_bytes,
+        },
+        "cost": {"flops_per_chip": flops,
+                 "bytes_per_chip": bytes_accessed,
+                 "xla_raw_flops": float(ca.get("flops", 0.0)),
+                 "xla_raw_bytes": float(ca.get("bytes accessed", 0.0)),
+                 "max_loop_trip": analysis["max_loop_trip"]},
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_total": mf_total,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": (mf_per_chip / flops) if flops else 0.0,
+    }
+    return result
+
+
+def run_matrix(archs, shapes, *, multi_pod: bool, out_dir: str,
+               force: bool = False, ctx_overrides: Optional[dict] = None,
+               tag: str = "") -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    results = []
+    mesh_name = ("multipod" if multi_pod else "pod") + (f"-{tag}" if tag else "")
+    for arch in archs:
+        for shape_name in shapes:
+            fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+            if os.path.exists(fn) and not force:
+                with open(fn) as f:
+                    results.append(json.load(f))
+                print(f"[cached] {arch} x {shape_name} x {mesh_name}")
+                continue
+            print(f"[run]    {arch} x {shape_name} x {mesh_name} ...",
+                  flush=True)
+            res = run_cell(arch, shape_name, mesh=mesh,
+                           ctx_overrides=ctx_overrides)
+            res["mesh_name"] = mesh_name
+            with open(fn, "w") as f:
+                json.dump(res, f, indent=1)
+            status = res["status"]
+            extra = ""
+            if status == "ok":
+                r = res["roofline"]
+                extra = (f" dominant={r['dominant']} "
+                         f"frac={r['roofline_fraction']:.3f} "
+                         f"compile={res['compile_s']:.1f}s")
+            elif status == "error":
+                extra = " " + res["error"][:200]
+            print(f"         -> {status}{extra}", flush=True)
+            results.append(res)
+    return results

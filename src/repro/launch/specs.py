@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Nothing here allocates device memory: train state, KV caches and batches are
+all abstract. The modality frontends (vision patches / audio frames) are
+stubs per the assignment — ``input_specs`` supplies precomputed embeddings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    inputs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.cross_attn_every:
+        inputs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return inputs
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """One new token against a cache of length shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = model.init_cache(cfg, B, S, abstract=True)
+    inputs = {
+        "caches": caches,
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        inputs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return inputs
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (train; fwd+bwd) or 2·N·D (serve; fwd only),
+    N = active params for MoE."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,2 @@
+from repro.models.layers import ModelContext
+from repro.models import model

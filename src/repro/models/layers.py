@@ -1,0 +1,497 @@
+"""Core transformer layers: norms, RoPE, GQA/MLA/cross attention, SwiGLU.
+
+All functions are pure (params-in, activations-out) and jit/scan/shard_map
+friendly. Attention is implemented flash-style at the jnp level (online
+softmax over KV blocks, sequential map over Q blocks) so 32k prefill lowers
+with bounded intermediates; the blocks are MXU-aligned (multiples of 128).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Context: runtime knobs threaded through the model (mesh, impl choices).
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelContext:
+    mesh: Any = None                  # jax Mesh or None (single device tests)
+    model_axis: str = "model"
+    data_axes: Tuple[str, ...] = ("data",)   # batch axes, e.g. ("pod","data")
+    moe_impl: str = "dense"           # dense | ep (expert-parallel shard_map)
+    remat: str = "full"               # none | full
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    attn_skip_noncausal: bool = False  # hillclimb: skip fully-masked KV blocks
+    capacity_factor: float = 1.25
+    ssd_chunk: int = 256
+    seq_shard_residual: bool = False   # hillclimb: Megatron-SP style residual
+    no_tp: bool = False                # hillclimb: pure-DP logical remap
+                                       # (small models on a big mesh)
+
+    @property
+    def model_axis_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def data_axes_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def shard(self, x, *dims):
+        """with_sharding_constraint by logical dim tags.
+
+        dims entries: None | 'batch' (pod+data axes) | 'model'. Tags whose
+        mesh extent doesn't divide the dim are dropped (replicated) — e.g.
+        gemma3's 8 heads on a 16-way model axis. No-op without a mesh.
+
+        These block-boundary constraints are what keep GSPMD from
+        replicating compute over the model axis (without them the 512-chip
+        dry-run showed ~8x per-chip FLOPs and >100 GiB/chip activations).
+        """
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = []
+        for size, tag in zip(x.shape, dims):
+            if tag == "batch":
+                ax = self.data_axes
+                n = self.data_axes_size
+            elif tag == "model" and not self.no_tp:
+                ax = self.model_axis
+                n = self.model_axis_size
+            else:
+                spec.append(None)
+                continue
+            spec.append(ax if (n > 0 and size % n == 0) else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def shard_residual(self, x):
+        """Residual-stream constraint [B, S, d]. With seq_shard_residual
+        (Megatron-SP style) the sequence dim is sharded over the model axis
+        between blocks, turning per-block activation all-reduces into
+        reduce-scatter/all-gather pairs (half the ICI traffic)."""
+        if self.seq_shard_residual and not self.no_tp:
+            return self.shard(x, "batch", "model", None)
+        return self.shard(x, "batch", None, None)
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# --------------------------------------------------------------------------
+# RoPE (llama-style rotate-half convention)
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash-style attention (online softmax over KV blocks)
+# --------------------------------------------------------------------------
+def _block_mask(q_idx: jax.Array, k_idx: jax.Array, causal: bool,
+                window: int, kv_len: Optional[jax.Array]) -> jax.Array:
+    """[Q, K] boolean mask; True = attend."""
+    m = jnp.ones((q_idx.shape[0], k_idx.shape[0]), dtype=bool)
+    if causal:
+        m &= k_idx[None, :] <= q_idx[:, None]
+    if window > 0:
+        m &= (q_idx[:, None] - k_idx[None, :]) < window
+    if kv_len is not None:
+        m &= k_idx[None, :] < kv_len
+    return m
+
+
+def attention(
+    q: jax.Array,                 # [B, Sq, H, D]
+    k: jax.Array,                 # [B, Skv, KV, D]
+    v: jax.Array,                 # [B, Skv, KV, Dv]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,     # global position of q[0]
+    kv_offset: jax.Array | int = 0,    # global position of k[0]
+    kv_len: Optional[jax.Array] = None,  # valid cache length (decode)
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    skip_noncausal: bool = False,
+    scale: Optional[float] = None,
+    ctx: Optional["ModelContext"] = None,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, Dv = v.shape
+    rep = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    # Attention partitioning: shard KV heads over the model axis when they
+    # divide it (MLA/MHA archs); otherwise context-parallel (shard the
+    # q-chunk rows) — GQA archs with 4-8 KV heads on a 16-way axis.
+    m = ctx.model_axis_size if ctx is not None else 1
+    head_shard = ctx is not None and m > 1 and KV % m == 0
+
+    if Sq == 1:
+        # Decode: one query row against the (possibly seq-sharded) KV cache.
+        # Single einsum keeps the score/PV computation partitioned along the
+        # cache sequence dim — chunk-scanning here would force per-step
+        # gathers of the sharded cache (observed: ~30 GB/token all-gather).
+        qh = q.reshape(B, KV, rep, D)
+        s = jnp.einsum("bgrd,bkgd->bgrk", qh, k,
+                       preferred_element_type=jnp.float32) * scale
+        k_idx = kv_offset + jnp.arange(Skv)
+        valid = k_idx < kv_len if kv_len is not None else \
+            jnp.ones((Skv,), bool)
+        if window > 0 and kv_len is not None:
+            valid &= (kv_len - 1 - k_idx) < window
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        if ctx is not None:
+            s = ctx.shard(s, "batch", None, None, "model")
+        p = jax.nn.softmax(s, axis=-1)          # f32 probabilities
+        out = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, 1, H, Dv).astype(v.dtype)
+
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Skv)
+    nq = max(Sq // q_chunk, 1)
+    nk = max(Skv // k_chunk, 1)
+    # Fall back to one block if not divisible (smoke shapes).
+    if Sq % q_chunk:
+        q_chunk, nq = Sq, 1
+    if Skv % k_chunk:
+        k_chunk, nk = Skv, 1
+
+    qb = q.reshape(B, nq, q_chunk, KV, rep, D)
+    kb = k.reshape(B, nk, k_chunk, KV, D)
+    vb = v.reshape(B, nk, k_chunk, KV, Dv)
+    if ctx is not None:
+        if head_shard:
+            qb = ctx.shard(qb, "batch", None, None, "model", None, None)
+            kb = ctx.shard(kb, "batch", None, None, "model", None)
+            vb = ctx.shard(vb, "batch", None, None, "model", None)
+        else:
+            qb = ctx.shard(qb, "batch", None, "model", None, None, None)
+            kb = ctx.shard(kb, "batch", None, None, None, None)
+            vb = ctx.shard(vb, "batch", None, None, None, None)
+
+    def q_block(carry, qi):
+        qi_q = qb[:, qi]                                    # [B,qc,KV,rep,D]
+        q_idx = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(state, ki):
+            # named_scope marks the VMEM-residency boundary: in the Pallas
+            # flash kernel (kernels/flash_attention) everything inside this
+            # scope lives in VMEM; the roofline analyzer's fused-region mode
+            # (hlo.analyze(fused_scopes=...)) discounts its HBM traffic.
+            with jax.named_scope("vmem_flash"):
+                m_prev, l_prev, acc = state
+                k_i = kb[:, ki]
+                v_i = vb[:, ki]
+                k_idx = kv_offset + ki * k_chunk + jnp.arange(k_chunk)
+                s = jnp.einsum("bqgrd,bkgd->bgrqk", qi_q, k_i,
+                               preferred_element_type=jnp.float32) * scale
+                mask = _block_mask(q_idx, k_idx, causal, window, kv_len)
+                s = jnp.where(mask[None, None, None], s, -1e30)
+                m_new = jnp.maximum(m_prev, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m_prev - m_new)
+                l_new = l_prev * corr + p.sum(axis=-1)
+                pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(v_i.dtype), v_i,
+                                preferred_element_type=jnp.float32)
+                acc = acc * corr[..., None] + pv
+                return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, rep, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, q_chunk, Dv), jnp.float32)
+
+        def run_block(state, ki):
+            if not skip_noncausal or not causal:
+                return kv_block(state, ki)
+            # Hillclimb option: skip blocks that are entirely in the future
+            # (or entirely outside the sliding window). lax.cond lets TPU
+            # skip the matmuls at runtime.
+            k_start = kv_offset + ki * k_chunk
+            k_end_excl = k_start + k_chunk
+            q_hi = q_offset + qi * q_chunk + q_chunk - 1
+            q_lo = q_offset + qi * q_chunk
+            future = k_start > q_hi
+            stale = (window > 0) & (q_lo - (k_end_excl - 1) >= window)
+            return jax.lax.cond(
+                jnp.logical_or(future, stale),
+                lambda s, _: (s, None), kv_block, state, ki)
+
+        (m, l, acc), _ = jax.lax.scan(run_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # [B,KV,rep,qc,Dv] -> [B,qc,KV*rep,Dv]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, Dv)
+        return carry, out.astype(v.dtype)
+
+    # Inner remat: the flash-style forward is O(block) memory, but a naive
+    # backward would store every block's probabilities. Recompute per
+    # q-block instead (this is what makes 32k prefill lower within HBM).
+    q_block = jax.checkpoint(q_block, prevent_cse=False)
+    if nq == 1:
+        _, out = q_block(None, 0)
+        return out
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # [nq, B, qc, H, Dv] -> [B, Sq, H, Dv]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dv)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block (self / cross), with optional KV cache for decode.
+# --------------------------------------------------------------------------
+def init_attn(key, cfg, *, cross: bool = False) -> Params:
+    d = cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    s = lambda *shape: 1.0 / math.sqrt(shape[0])
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dt) * s(d),
+        "wk": jax.random.normal(ks[1], (d, kv * hd), dt) * s(d),
+        "wv": jax.random.normal(ks[2], (d, kv * hd), dt) * s(d),
+        "wo": jax.random.normal(ks[3], (h * hd, d), dt) * s(h * hd),
+        "ln": jnp.zeros((d,), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cross:
+        # separate KV projections over image tokens + gate (llama-3.2 style)
+        p["gate"] = jnp.zeros((), dt)
+    return p
+
+
+def attn_block(
+    p: Params, x: jax.Array, cfg, ctx: ModelContext, *,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (k_cache, v_cache)
+    cache_pos: Optional[jax.Array] = None,                # scalar write pos
+    cross_kv: Optional[jax.Array] = None,                 # image embeds
+    return_kv: bool = False,                              # prefill cache emit
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Pre-norm attention residual block.
+
+    Returns (y, new_cache). In decode mode (cache given), x is [B, 1, d] and
+    the KV cache is updated at cache_pos (ring position for windowed layers).
+    With return_kv (prefill), the raw rotated (k, v) are returned for the
+    caller to fold into cache arrays.
+    """
+    B, S, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    q = xn @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, h, hd)
+
+    cross = cross_kv is not None
+    kv_src = cross_kv if cross else xn
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, kv_src.shape[1], kv, hd)
+    v = v.reshape(B, kv_src.shape[1], kv, hd)
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and not cross:
+        k_cache, v_cache = cache
+        S_cache = k_cache.shape[1]
+        # ring position for windowed caches, linear otherwise
+        wpos = cache_pos % S_cache
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, wpos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, wpos, 0, 0))
+        new_cache = (k_cache, v_cache)
+        kv_len = jnp.minimum(cache_pos + S, S_cache)
+        out = attention(
+            q, k_cache, v_cache, causal=False, window=0,
+            kv_len=kv_len, q_chunk=ctx.q_chunk, k_chunk=ctx.k_chunk, ctx=ctx)
+    elif cross:
+        out = attention(q, k, v, causal=False, window=0,
+                        q_chunk=ctx.q_chunk, k_chunk=ctx.k_chunk, ctx=ctx)
+    else:
+        out = attention(
+            q, k, v, causal=True, window=window,
+            q_chunk=ctx.q_chunk, k_chunk=ctx.k_chunk,
+            skip_noncausal=ctx.attn_skip_noncausal, ctx=ctx)
+
+    y = out.reshape(B, S, h * hd) @ p["wo"]
+    y = ctx.shard_residual(y)
+    if cross:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    if return_kv and not cross:
+        new_cache = (k, v)
+    return x + y, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# --------------------------------------------------------------------------
+def init_mla(key, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    s = lambda n: 1.0 / math.sqrt(n)
+    return {
+        "wq_a": jax.random.normal(ks[0], (d, qr), dt) * s(d),
+        "q_ln": jnp.zeros((qr,), dt),
+        "wq_b": jax.random.normal(ks[1], (qr, h * (dn + dr)), dt) * s(qr),
+        "wkv_a": jax.random.normal(ks[2], (d, kvr + dr), dt) * s(d),
+        "kv_ln": jnp.zeros((kvr,), dt),
+        "wk_b": jax.random.normal(ks[3], (kvr, h * dn), dt) * s(kvr),
+        "wv_b": jax.random.normal(ks[4], (kvr, h * dv), dt) * s(kvr),
+        "wo": jax.random.normal(ks[5], (h * dv, d), dt) * s(h * dv),
+        "ln": jnp.zeros((d,), dt),
+    }
+
+
+def mla_block(
+    p: Params, x: jax.Array, cfg, ctx: ModelContext, *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (c_kv, k_pe)
+    cache_pos: Optional[jax.Array] = None,
+    return_kv: bool = False,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """MLA residual block. Decode uses the latent cache with matrix
+    absorption (q absorbed through wk_b; output through wv_b), the
+    production MLA inference path."""
+    B, S, d = x.shape
+    h = cfg.num_heads
+    kvr = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+
+    q_lat = rms_norm(xn @ p["wq_a"], p["q_ln"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(B, S, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    kv_a = xn @ p["wkv_a"]                              # [B,S,kvr+dr]
+    c_kv = rms_norm(kv_a[..., :kvr], p["kv_ln"], cfg.norm_eps)
+    k_pe = apply_rope(kv_a[..., kvr:][:, :, None, :], positions,
+                      cfg.rope_theta)[:, :, 0]          # [B,S,dr]
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    new_cache = None
+    if cache is not None:
+        c_cache, pe_cache = cache
+        c_cache = jax.lax.dynamic_update_slice(
+            c_cache, c_kv.astype(c_cache.dtype), (0, cache_pos, 0))
+        pe_cache = jax.lax.dynamic_update_slice(
+            pe_cache, k_pe.astype(pe_cache.dtype), (0, cache_pos, 0))
+        new_cache = (c_cache, pe_cache)
+        kv_len = cache_pos + S
+        # absorbed decode: q' = q_nope @ wk_b^T per head -> latent space
+        wk_b = p["wk_b"].reshape(kvr, h, dn)
+        q_lat_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b)
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat_abs,
+                           c_cache.astype(q_lat_abs.dtype))
+        s_pe = jnp.einsum("bshd,btd->bhst", q_pe,
+                          pe_cache.astype(q_pe.dtype))
+        s_all = (s_lat + s_pe).astype(jnp.float32) * scale
+        t_idx = jnp.arange(c_cache.shape[1])
+        s_all = jnp.where(t_idx[None, None, None, :] < kv_len, s_all, -1e30)
+        a = jax.nn.softmax(s_all, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", a.astype(c_cache.dtype), c_cache)
+        wv_b = p["wv_b"].reshape(kvr, h, dv)
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, wv_b)
+    else:
+        k_nope = (c_kv @ p["wk_b"]).reshape(B, S, h, dn)
+        vfull = (c_kv @ p["wv_b"]).reshape(B, S, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, h, dr))],
+            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = attention(qfull, k, vfull, causal=True, scale=scale,
+                        q_chunk=ctx.q_chunk, k_chunk=ctx.k_chunk,
+                        skip_noncausal=ctx.attn_skip_noncausal, ctx=ctx)
+
+    y = out.reshape(B, S, h * dv) @ p["wo"]
+    y = ctx.shard_residual(y)
+    if return_kv:
+        new_cache = (c_kv, k_pe)
+    return x + y, new_cache
+
+
+# --------------------------------------------------------------------------
+# Dense FFN block
+# --------------------------------------------------------------------------
+def init_ffn(key, cfg, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w1": jax.random.normal(ks[0], (d, ff), dt) / math.sqrt(d),
+        "w3": jax.random.normal(ks[1], (d, ff), dt) / math.sqrt(d),
+        "w2": jax.random.normal(ks[2], (ff, d), dt) / math.sqrt(ff),
+        "ln": jnp.zeros((d,), dt),
+    }
+
+
+def ffn_block(p: Params, x: jax.Array, cfg, ctx: Optional[ModelContext] = None
+              ) -> jax.Array:
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx is not None:
+        h = jax.nn.silu(xn @ p["w1"]) * (xn @ p["w3"])
+        h = ctx.shard(h, "batch", None, "model")
+        return ctx.shard_residual(x + h @ p["w2"])
+    return x + swiglu(xn, p["w1"], p["w3"], p["w2"])

@@ -1,0 +1,362 @@
+"""Model assembly: stage-plan execution with scan-over-layers.
+
+A model is assembled from its config's stage plan (``cfg.plan()``): each stage
+is a super-block of LayerSpecs repeated R times, with stacked parameters and a
+``lax.scan`` over repeats (HLO size is O(#stages), not O(#layers) — essential
+for the 512-device dry-run compiles). Shared layers (Zamba2's shared attention
+block) keep a single unstacked param set applied every repeat.
+
+Entry points:
+  init(key, cfg)                      -> params
+  forward(params, tokens, ...)        -> (hidden [B,S,d], aux_loss)
+  lm_loss(params, batch, ...)         -> (scalar loss, metrics)   [train]
+  prefill(params, tokens, ...)        -> (caches, last_logits)    [serve]
+  decode_step(params, caches, ...)    -> (caches, logits)         [serve]
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, Stage
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import ModelContext
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    if spec.kind == "attn":
+        p = {"attn": L.init_attn(ks[0], cfg)}
+    elif spec.kind == "cross_attn":
+        p = {"attn": L.init_attn(ks[0], cfg, cross=True)}
+    elif spec.kind == "mla":
+        p = {"attn": L.init_mla(ks[0], cfg)}
+    elif spec.kind == "mamba":
+        p = {"attn": SSM.init_mamba(ks[0], cfg)}
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn == "dense":
+        ff = cfg.dense_d_ff if (cfg.family == "moe" and cfg.dense_d_ff) else None
+        p["ffn"] = L.init_ffn(ks[1], cfg, d_ff=ff)
+    elif spec.ffn == "moe":
+        p["ffn"] = MOE.init_moe(ks[1], cfg)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    kemb, kun, kmtp, *stage_keys = jax.random.split(key, 3 + len(cfg.plan()))
+    Vp, d = cfg.padded_vocab_size, cfg.d_model
+    params: Params = {
+        "embed": jax.random.normal(kemb, (Vp, d), dt) * 0.02,
+        "unembed": jax.random.normal(kun, (d, Vp), dt) / (d ** 0.5),
+        "final_ln": jnp.zeros((d,), dt),
+    }
+    for si, stage in enumerate(cfg.plan()):
+        skey = stage_keys[si]
+        stacked = {}
+        shared = {}
+        for j, spec in enumerate(stage.layers):
+            jkey = jax.random.fold_in(skey, j)
+            if spec.shared:
+                shared[f"layer{j}"] = _init_layer(jkey, spec, cfg)
+            else:
+                rkeys = jax.random.split(jkey, stage.repeat)
+                stacked[f"layer{j}"] = jax.vmap(
+                    lambda k: _init_layer(k, spec, cfg))(rkeys)
+        params[f"stage{si}"] = stacked
+        if shared:
+            params[f"stage{si}_shared"] = shared
+    if cfg.mtp_depth:
+        p = {
+            "proj": jax.random.normal(kmtp, (2 * d, d), dt) / (2 * d) ** 0.5,
+            "ln_h": jnp.zeros((d,), dt),
+            "ln_e": jnp.zeros((d,), dt),
+        }
+        p.update(_init_layer(jax.random.fold_in(kmtp, 1),
+                             LayerSpec("attn", "dense"), cfg))
+        params["mtp"] = p
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+def _apply_layer(spec: LayerSpec, p: Params, x, cfg, ctx, *,
+                 positions=None, cache=None, cache_pos=None,
+                 cross_kv=None, return_cache=False):
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind == "attn":
+        x, nc = L.attn_block(
+            p["attn"], x, cfg, ctx, window=spec.window, positions=positions,
+            cache=cache, cache_pos=cache_pos, return_kv=return_cache)
+    elif spec.kind == "cross_attn":
+        x, _ = L.attn_block(p["attn"], x, cfg, ctx, cross_kv=cross_kv)
+        nc = ()
+    elif spec.kind == "mla":
+        x, nc = L.mla_block(p["attn"], x, cfg, ctx, positions=positions,
+                            cache=cache, cache_pos=cache_pos,
+                            return_kv=return_cache)
+    elif spec.kind == "mamba":
+        x, nc = SSM.mamba_block(p["attn"], x, cfg, ctx, cache=cache,
+                                return_state=return_cache)
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn == "dense":
+        x = L.ffn_block(p["ffn"], x, cfg, ctx)
+    elif spec.ffn == "moe":
+        x, aux = MOE.moe_block(p["ffn"], x, cfg, ctx)
+    return x, nc, aux
+
+
+def _stage_params(params: Params, si: int):
+    return params.get(f"stage{si}", {}), params.get(f"stage{si}_shared", {})
+
+
+def _layer_p(spec, stacked, shared, j):
+    return shared[f"layer{j}"] if spec.shared else stacked[f"layer{j}"]
+
+
+# --------------------------------------------------------------------------
+# forward (train / teacher-forced)
+# --------------------------------------------------------------------------
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            ctx: ModelContext, *, image_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: [B, S] -> (hidden [B, S, d], aux_loss)."""
+    x = params["embed"][tokens]
+    x = ctx.shard_residual(x)
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for si, stage in enumerate(cfg.plan()):
+        stacked, shared = _stage_params(params, si)
+
+        def block(carry, bp, *, _stage=stage, _shared=shared):
+            x, aux = carry
+            for j, spec in enumerate(_stage.layers):
+                p = _layer_p(spec, bp, _shared, j)
+                x, _, a = _apply_layer(spec, p, x, cfg, ctx,
+                                       positions=positions,
+                                       cross_kv=image_embeds)
+                aux = aux + a
+            return (x, aux), None
+
+        if ctx.remat == "full":
+            block = jax.checkpoint(block, prevent_cse=False)
+        if stacked:
+            (x, aux_total), _ = jax.lax.scan(
+                block, (x, aux_total), stacked, length=stage.repeat)
+        else:  # all-shared stage (not used by current plans, but legal)
+            for _ in range(stage.repeat):
+                (x, aux_total), _ = block((x, aux_total), {})
+
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, aux_total
+
+
+# --------------------------------------------------------------------------
+# fused unembed + cross-entropy (chunked over sequence: full [B,S,V] logits
+# are never materialized — the memory-critical path for 152k/262k vocabs).
+# --------------------------------------------------------------------------
+def fused_ce(x: jax.Array, unembed: jax.Array, targets: jax.Array,
+             vocab_size: int, chunk: int = 512,
+             ctx: Optional[ModelContext] = None) -> jax.Array:
+    B, S, d = x.shape
+    Vp = unembed.shape[1]
+    if S % chunk or S <= chunk:
+        chunk = S
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    vmask = (jnp.arange(Vp) < vocab_size)
+
+    def per_chunk(carry, args):
+        xc, tc = args
+        logits = (xc @ unembed).astype(jnp.float32)
+        if ctx is not None:
+            logits = ctx.shard(logits, "batch", None, "model")
+        logits = jnp.where(vmask[None, None, :], logits, -1e30)
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry, lz - ll
+
+    # remat per chunk: never keep a chunk's [B,c,V] float32 logits for bwd
+    per_chunk = jax.checkpoint(per_chunk, prevent_cse=False)
+    _, losses = jax.lax.scan(per_chunk, None, (xs, ts))   # [n, B, chunk]
+    return losses.mean()
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            ctx: ModelContext, *, mtp_weight: float = 0.3,
+            aux_weight: float = 0.001) -> Tuple[jax.Array, Dict[str, Any]]:
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    hidden, aux = forward(params, inputs, cfg, ctx,
+                          image_embeds=batch.get("image_embeds"))
+    loss = fused_ce(hidden, params["unembed"], targets, cfg.vocab_size,
+                    ctx=ctx)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth and "mtp" in params:
+        # MTP: predict t+2 from hidden_t combined with embed(token_{t+1}).
+        p = params["mtp"]
+        h = L.rms_norm(hidden[:, :-1], p["ln_h"], cfg.norm_eps)
+        e = L.rms_norm(params["embed"][targets[:, :-1]], p["ln_e"],
+                       cfg.norm_eps)
+        hm = jnp.concatenate([h, e], axis=-1) @ p["proj"]
+        hm, _, _ = _apply_layer(LayerSpec("attn", "dense"), p, hm, cfg, ctx,
+                                positions=jnp.arange(hm.shape[1])[None, :])
+        mtp = fused_ce(hm, params["unembed"], targets[:, 1:], cfg.vocab_size)
+        metrics["mtp"] = mtp
+        loss = loss + mtp_weight * mtp
+    loss = loss + aux_weight * aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# serve: cache construction, prefill, decode
+# --------------------------------------------------------------------------
+def _cache_spec_for_layer(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                          cache_len: int):
+    """Shapes/dtypes of one layer's cache (no leading repeat dim)."""
+    dt = jnp.dtype(cfg.dtype)
+    if spec.kind == "attn":
+        S = min(spec.window, cache_len) if spec.window else cache_len
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        return (jax.ShapeDtypeStruct((batch, S, kv, hd), dt),
+                jax.ShapeDtypeStruct((batch, S, kv, hd), dt))
+    if spec.kind == "mla":
+        return (jax.ShapeDtypeStruct((batch, cache_len, cfg.kv_lora_rank), dt),
+                jax.ShapeDtypeStruct((batch, cache_len, cfg.qk_rope_head_dim),
+                                     dt))
+    if spec.kind == "mamba":
+        ch = SSM._conv_channels(cfg)
+        return (jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, ch), dt),
+                jax.ShapeDtypeStruct(
+                    (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32))
+    if spec.kind == "cross_attn":
+        return ()
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               abstract: bool = False):
+    """Cache pytree: {stage{i}: {layer{j}: stacked (repeat, ...) arrays}}."""
+    mk = (lambda s: s) if abstract else \
+         (lambda s: jnp.zeros(s.shape, s.dtype))
+    caches = {}
+    for si, stage in enumerate(cfg.plan()):
+        st = {}
+        for j, spec in enumerate(stage.layers):
+            per = _cache_spec_for_layer(spec, cfg, batch, cache_len)
+            st[f"layer{j}"] = tuple(
+                mk(jax.ShapeDtypeStruct((stage.repeat,) + a.shape, a.dtype))
+                for a in per)
+        caches[f"stage{si}"] = st
+    return caches
+
+
+def _fold_prefill_cache(spec: LayerSpec, raw, cfg, cache_len: int):
+    """Convert raw prefill (k,v)/(ckv,kpe)/(tail,state) to cache arrays."""
+    if spec.kind == "cross_attn":
+        return ()
+    if spec.kind == "mamba":
+        tail, state = raw
+        return (tail.astype(jnp.dtype(cfg.dtype)), state)
+    a, b = raw                                   # seq-major tensors
+    S = a.shape[1]
+    dt = jnp.dtype(cfg.dtype)
+    if spec.kind == "attn" and spec.window and spec.window < cache_len:
+        # keep last `window` rows; ring-aligned because S % window == 0
+        a, b = a[:, -spec.window:], b[:, -spec.window:]
+        return (a.astype(dt), b.astype(dt))
+
+    def pad(t):
+        padlen = cache_len - t.shape[1]
+        if padlen:
+            t = jnp.pad(t, ((0, 0), (0, padlen)) + ((0, 0),) * (t.ndim - 2))
+        return t.astype(dt)
+    return (pad(a), pad(b))
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            ctx: ModelContext, *, cache_len: int,
+            image_embeds: Optional[jax.Array] = None):
+    """Teacher-forced pass emitting decode caches + last-position logits."""
+    x = params["embed"][tokens]
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    caches = {}
+
+    for si, stage in enumerate(cfg.plan()):
+        stacked, shared = _stage_params(params, si)
+
+        def block(x, bp, *, _stage=stage, _shared=shared):
+            ncs = {}
+            for j, spec in enumerate(_stage.layers):
+                p = _layer_p(spec, bp, _shared, j)
+                x, nc, _ = _apply_layer(spec, p, x, cfg, ctx,
+                                        positions=positions,
+                                        cross_kv=image_embeds,
+                                        return_cache=True)
+                ncs[f"layer{j}"] = _fold_prefill_cache(spec, nc, cfg,
+                                                       cache_len)
+            return x, ncs
+
+        if ctx.remat == "full":
+            block = jax.checkpoint(block, prevent_cse=False)
+        x, stage_cache = jax.lax.scan(block, x, stacked, length=stage.repeat)
+        caches[f"stage{si}"] = stage_cache
+
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["unembed"]).astype(jnp.float32)
+    return caches, logits
+
+
+def decode_step(params: Params, caches, token: jax.Array, pos: jax.Array,
+                cfg: ModelConfig, ctx: ModelContext, *,
+                image_embeds: Optional[jax.Array] = None):
+    """One serve step: token [B,1] at position pos (scalar int32)."""
+    x = params["embed"][token]
+    positions = jnp.broadcast_to(pos, token.shape)
+    new_caches = {}
+
+    for si, stage in enumerate(cfg.plan()):
+        stacked, shared = _stage_params(params, si)
+        stage_cache = caches[f"stage{si}"]
+
+        def block(x, xs, *, _stage=stage, _shared=shared):
+            bp, cache_blk = xs
+            ncs = {}
+            for j, spec in enumerate(_stage.layers):
+                p = _layer_p(spec, bp, _shared, j)
+                c = cache_blk[f"layer{j}"]
+                c = c if c else None
+                x, nc, _ = _apply_layer(spec, p, x, cfg, ctx,
+                                        positions=positions,
+                                        cache=c, cache_pos=pos,
+                                        cross_kv=image_embeds)
+                ncs[f"layer{j}"] = nc if nc is not None else ()
+            return x, ncs
+
+        x, new_stage_cache = jax.lax.scan(block, x, (stacked, stage_cache),
+                                          length=stage.repeat)
+        new_caches[f"stage{si}"] = new_stage_cache
+
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["unembed"]).astype(jnp.float32)
+    return new_caches, logits

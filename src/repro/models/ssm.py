@@ -1,0 +1,202 @@
+"""Mamba2 / SSD (state-space duality) block: chunked train path + O(1) decode.
+
+Implements the SSD algorithm of arXiv:2405.21060 (chunked quadratic-within-
+chunk + linear recurrence across chunks), a causal depthwise conv stem, gated
+RMSNorm, and the single-token recurrent step used for decode / long-context
+(the `long_500k` shape rides on this: state is O(heads x head_dim x N),
+independent of sequence length).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., T] -> S[..., i, j] = sum_{k=j+1..i} a_k (i>=j), -inf else."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def _conv_channels(cfg) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba(key, cfg) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = _conv_channels(cfg)
+    proj_out = 2 * d_in + 2 * g * n + h      # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dt) / math.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), dt) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, h).astype(jnp.float32))),
+        "gnorm": jnp.zeros((d_in,), dt),
+        "out_proj": jax.random.normal(ks[2], (d_in, d), dt) / math.sqrt(d_in),
+        "ln": jnp.zeros((d,), dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt: jax.Array):
+    d_in = cfg.ssm_d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. xBC: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    out = xBC * w[-1]
+    for i in range(1, K):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[K - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int,
+             init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x: [b,s,h,p]; dt: [b,s,h]; A: [h] (negative);
+    B, C: [b,s,g,n]. Returns (y [b,s,h,p], final_state [b,h,p,n])."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    # head-broadcast the group B/C
+    Bh = jnp.repeat(B, rep, axis=2)        # [b,s,h,n]
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xd = (x * dt[..., None]).astype(jnp.float32)          # dt-discretized input
+    dA = (dt * A[None, None, :]).astype(jnp.float32)      # [b,s,h]
+
+    def r(t, shape):  # reshape into chunks
+        return t.reshape((b, nc, chunk) + shape)
+
+    xc = r(xd, (h, p))
+    Bc = r(Bh.astype(jnp.float32), (h, n))
+    Cc = r(Ch.astype(jnp.float32), (h, n))
+    Ac = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # [b,h,nc,Q]
+    A_cs = jnp.cumsum(Ac, axis=-1)
+
+    # 1. intra-chunk
+    L = jnp.exp(_segsum(Ac))                               # [b,h,nc,Q,Q]
+    y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp", Cc, Bc, L, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)          # [b,h,nc,Q]
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cs[..., -1])                   # [b,h,nc]
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(hprev, inp):
+        st, dec = inp                                      # [b,h,p,n], [b,h]
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    (hfinal, prev_states) = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [b,nc,h,p,n]
+
+    # 4. state contribution to outputs
+    state_decay = jnp.exp(A_cs)                            # [b,h,nc,Q]
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, hfinal
+
+
+def mamba_block(
+    p: Params, x: jax.Array, cfg, ctx, *,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (conv_state, ssm_state)
+    return_state: bool = False,                           # prefill state emit
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Pre-norm Mamba2 residual block. cache given => single-token decode."""
+    from repro.models.layers import rms_norm
+    B_, S, d = x.shape
+    d_in = cfg.ssm_d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = xn @ p["in_proj"]
+    zxbcdt = ctx.shard(zxbcdt, "batch", None, "model")
+    z, xBC, dtr = _split_proj(cfg, zxbcdt)
+
+    A = -jnp.exp(p["A_log"])                               # [h]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+
+    new_cache = None
+    if cache is None:
+        xBC_raw = xBC
+        xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        xs = xBC[..., :d_in].reshape(B_, S, h, hd)
+        xs = ctx.shard(xs, "batch", None, "model", None)
+        Bm = xBC[..., d_in:d_in + g * n].reshape(B_, S, g, n)
+        Cm = xBC[..., d_in + g * n:].reshape(B_, S, g, n)
+        y, hfinal = ssd_scan(xs, dt, A, Bm, Cm, ctx.ssd_chunk)
+        y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        if return_state:
+            K = cfg.ssm_conv
+            tail = xBC_raw[:, -(K - 1):] if K > 1 else xBC_raw[:, :0]
+            new_cache = (tail, hfinal)
+    else:
+        conv_state, ssm_state = cache                      # [B,K-1,C],[B,h,hd,n]
+        window = jnp.concatenate([conv_state, xBC], axis=1)  # [B,K,C]
+        yconv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                           p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+        xBC1 = jax.nn.silu(yconv)[:, None, :]              # [B,1,C]
+        xs = xBC1[..., :d_in].reshape(B_, 1, h, hd)
+        Bm = xBC1[..., d_in:d_in + g * n].reshape(B_, 1, g, n)
+        Cm = xBC1[..., d_in + g * n:].reshape(B_, 1, g, n)
+        rep = h // g
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)             # [B,h,n]
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        dt1 = dt[:, 0]                                     # [B,h]
+        dA = jnp.exp(dt1 * A[None, :])                     # [B,h]
+        upd = (dt1[..., None] * xs[:, 0].astype(jnp.float32))[..., None] \
+            * Bh[:, :, None, :].astype(jnp.float32)        # [B,h,hd,n]
+        ssm_state = ssm_state.astype(jnp.float32) * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", ssm_state,
+                       Ch.astype(jnp.float32))[:, None]
+        y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        new_cache = (window[:, 1:], ssm_state)
+
+    y = y.reshape(B_, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["gnorm"], cfg.norm_eps)
+    out = x + y @ p["out_proj"]
+    return ctx.shard_residual(out), new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
+    conv_ch = _conv_channels(cfg)
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                  jnp.float32),
+    )

@@ -1,0 +1,104 @@
+"""Small vision transformer consuming loader-fed RGB batches.
+
+The end-to-end driver the paper's protocol ultimately serves: JPEG bytes ->
+(multi-worker loader) -> patches -> ViT -> classifier. Built from the same
+layer library as the LM archs; used by examples/train_vision_pipeline.py and
+the system test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import ModelContext
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    image_hw: Tuple[int, int] = (64, 64)
+    patch: int = 8
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    num_layers: int = 4
+    num_classes: int = 10
+    norm_eps: float = 1e-6
+    dtype: str = "float32"
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+
+    @property
+    def num_patches(self) -> int:
+        return (self.image_hw[0] // self.patch) * \
+            (self.image_hw[1] // self.patch)
+
+
+def init(key, cfg: ViTConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    pdim = cfg.patch * cfg.patch * 3
+    ks = jax.random.split(key, 4 + cfg.num_layers)
+    params = {
+        "patch_proj": jax.random.normal(ks[0], (pdim, cfg.d_model), dt)
+        / math.sqrt(pdim),
+        "pos": 0.02 * jax.random.normal(
+            ks[1], (cfg.num_patches, cfg.d_model), dt),
+        "final_ln": jnp.zeros((cfg.d_model,), dt),
+        "head": jax.random.normal(
+            ks[2], (cfg.d_model, cfg.num_classes), dt)
+        / math.sqrt(cfg.d_model),
+    }
+    for i in range(cfg.num_layers):
+        params[f"layer{i}"] = {
+            "attn": L.init_attn(ks[3 + i], cfg),
+            "ffn": L.init_ffn(jax.random.fold_in(ks[3 + i], 1), cfg),
+        }
+    return params
+
+
+def patchify(images: jax.Array, patch: int) -> jax.Array:
+    """[B, H, W, 3] uint8 -> [B, N, patch*patch*3] float."""
+    B, H, W, C = images.shape
+    x = images.astype(jnp.float32) / 127.5 - 1.0
+    x = x.reshape(B, H // patch, patch, W // patch, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, -1, patch * patch * C)
+
+
+def forward(params, images: jax.Array, cfg: ViTConfig,
+            ctx: ModelContext = ModelContext()) -> jax.Array:
+    x = patchify(images, cfg.patch) @ params["patch_proj"]
+    x = x + params["pos"][None]
+    for i in range(cfg.num_layers):
+        p = params[f"layer{i}"]
+        # bidirectional attention (no causal mask, no rope for patches)
+        xn = L.rms_norm(x, p["attn"]["ln"], cfg.norm_eps)
+        B, S, _ = xn.shape
+        q = (xn @ p["attn"]["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+        k = (xn @ p["attn"]["wk"]).reshape(B, S, cfg.num_kv_heads,
+                                           cfg.head_dim)
+        v = (xn @ p["attn"]["wv"]).reshape(B, S, cfg.num_kv_heads,
+                                           cfg.head_dim)
+        o = L.attention(q, k, v, causal=False, q_chunk=ctx.q_chunk,
+                        k_chunk=ctx.k_chunk, ctx=ctx)
+        x = x + o.reshape(B, S, -1) @ p["attn"]["wo"]
+        x = L.ffn_block(p["ffn"], x, cfg, ctx)
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x.mean(axis=1) @ params["head"]
+
+
+def loss_fn(params, batch, cfg: ViTConfig,
+            ctx: ModelContext = ModelContext()):
+    logits = forward(params, batch["image"], cfg, ctx).astype(jnp.float32)
+    labels = batch["label"]
+    lz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = (lz - ll).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,1 @@
+from repro.serve.engine import make_prefill_step, make_decode_step, generate

@@ -1,0 +1,58 @@
+"""Serving layer: batched prefill / decode step builders + a generate loop.
+
+``serve_step`` for the decode_* dry-run shapes is ``make_decode_step``: one
+new token per sequence against a persistent sharded KV/SSM cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.models.layers import ModelContext
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ModelContext,
+                      cache_len: int) -> Callable:
+    def prefill_step(params, tokens, image_embeds=None):
+        return model.prefill(params, tokens, cfg, ctx, cache_len=cache_len,
+                             image_embeds=image_embeds)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ModelContext) -> Callable:
+    def decode_step(params, caches, token, pos, image_embeds=None):
+        return model.decode_step(params, caches, token, pos, cfg, ctx,
+                                 image_embeds=image_embeds)
+    return decode_step
+
+
+def generate(params, prompt: jax.Array, cfg: ModelConfig, ctx: ModelContext,
+             *, max_new_tokens: int, cache_len: Optional[int] = None,
+             image_embeds=None, greedy: bool = True,
+             key=None) -> jax.Array:
+    """Simple batched generation (prefill + jitted decode loop)."""
+    B, S = prompt.shape
+    cache_len = cache_len or (S + max_new_tokens)
+    prefill_fn = jax.jit(make_prefill_step(cfg, ctx, cache_len))
+    decode_fn = jax.jit(make_decode_step(cfg, ctx))
+    caches, logits = prefill_fn(params, prompt, image_embeds)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
+    for i in range(max_new_tokens):
+        out.append(tok)
+        if i == max_new_tokens - 1:
+            break
+        caches, logits = decode_fn(params, caches, tok,
+                                   jnp.int32(S + i), image_embeds)
+        if greedy or key is None:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits)[:, None].astype(
+                prompt.dtype)
+    return jnp.concatenate(out, axis=1)

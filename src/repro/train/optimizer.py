@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay, global-norm clipping, bias correction.
+
+Moments live in ``cfg.opt_dtype`` (fp32 default; bf16 for deepseek-v3-671b so
+optimizer state fits 512 chips); the update math is always fp32. Optimizer
+state inherits the parameters' FSDP/TP sharding (ZeRO-3 by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params, opt_dtype: str = "float32"):
+    dt = jnp.dtype(opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
+    warm = jnp.minimum((step.astype(jnp.float32) + 1.0)
+                       / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(grads, opt_state, params, step, cfg: OptimizerConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(step, cfg)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_f = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu_f / bc1
+        vhat = nu_f / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return (new_p.astype(p.dtype), mu_f.astype(mu.dtype),
+                nu_f.astype(nu.dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu}, {"grad_norm": gnorm, "lr": lr}

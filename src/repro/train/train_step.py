@@ -1,0 +1,102 @@
+"""Train-step builder: value_and_grad over lm_loss + AdamW, remat-scanned.
+
+``make_train_step(cfg, ctx, opt_cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with the
+sharding trees from ``repro.distributed``. State layout::
+
+    {"params": ..., "opt": {"mu":..., "nu":...}, "step": int32 scalar,
+     "err": ...}                     # err only when grad compression is on
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compression
+from repro.models import model
+from repro.models.layers import ModelContext
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update
+
+
+def make_train_state(key, cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                     *, grad_compression: bool = False) -> Dict[str, Any]:
+    params = model.init(key, cfg)
+    state = {
+        "params": params,
+        "opt": adamw_init(params, cfg.opt_dtype),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if grad_compression:
+        state["err"] = compression.init_error_buffer(params)
+    return state
+
+
+def make_train_state_shapes(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                            *, grad_compression: bool = False):
+    """Abstract state (ShapeDtypeStructs) — used by the dry-run: no
+    parameter memory is ever allocated."""
+    return jax.eval_shape(
+        partial(make_train_state, cfg=cfg, opt_cfg=opt_cfg,
+                grad_compression=grad_compression),
+        jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ModelConfig, ctx: ModelContext,
+                    opt_cfg: OptimizerConfig,
+                    *, grad_compression: bool = False,
+                    microbatch: int = 0) -> Callable:
+    """microbatch > 0 enables gradient accumulation over
+    global_batch/microbatch sequential slices (a memory knob for hillclimbs).
+    """
+
+    def loss_fn(params, batch):
+        return model.lm_loss(params, batch, cfg, ctx)
+
+    def grads_of(params, batch):
+        if not microbatch:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % microbatch == 0, (B, microbatch)
+        n = B // microbatch
+
+        def mb(i, carry):
+            (loss_acc, metr_acc), g_acc = carry
+            sl = jax.tree_util.tree_map(
+                lambda t: jax.lax.dynamic_slice_in_dim(
+                    t, i * microbatch, microbatch, axis=0), batch)
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, sl)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (loss_acc + l, jax.tree_util.tree_map(
+                jnp.add, metr_acc, m)), g_acc
+
+        zg = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (l0, m0), g0 = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, jax.tree_util.tree_map(
+                lambda t: jax.lax.dynamic_slice_in_dim(t, 0, microbatch, 0),
+                batch))
+        (loss, metrics), grads = jax.lax.fori_loop(
+            1, n, mb, ((l0, m0), g0))
+        scale = 1.0 / n
+        return (loss * scale,
+                jax.tree_util.tree_map(lambda x: x * scale, metrics)), \
+            jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    def train_step(state, batch):
+        (loss, metrics), grads = grads_of(state["params"], batch)
+        new_state = dict(state)
+        if grad_compression:
+            grads, new_err = compression.compress_grads_with_feedback(
+                grads, state["err"])
+            new_state["err"] = new_err
+        params, opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], state["step"], opt_cfg)
+        new_state.update(params=params, opt=opt, step=state["step"] + 1)
+        metrics = dict(metrics, **opt_metrics)
+        return new_state, metrics
+
+    return train_step

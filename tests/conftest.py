@@ -1,0 +1,17 @@
+import os
+import sys
+
+# NOTE: no XLA device-count flags here — smoke tests and benches must see
+# the real single CPU device. Dry-run tests spawn subprocesses that set
+# their own flags (jax locks device count at first init).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.jpeg.corpus import Corpus, build_corpus
+
+
+@pytest.fixture(scope="session")
+def corpus() -> Corpus:
+    return build_corpus(12, seed=7)

@@ -1,0 +1,101 @@
+"""Elastic scaling: pod-loss policy + full restore-onto-smaller-mesh cycle."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.distributed.elastic import MeshSpec, plan_after_failure
+
+
+def test_policy_pod_loss_preserves_model_axis():
+    cur = MeshSpec((2, 16, 16), ("pod", "data", "model"))
+    d = plan_after_failure(cur, lost_pods=1)
+    assert d.mesh.shape == (16, 16)
+    assert d.mesh.axes == ("data", "model")
+    assert d.mesh.axis("model") == 16
+    assert d.microbatch_scale == 2           # global batch preserved
+    assert d.loader_shard_count == 16
+
+
+def test_policy_data_row_loss_rounds_down():
+    cur = MeshSpec((16, 16), ("data", "model"))
+    d = plan_after_failure(cur, lost_data_rows=3)   # 13 left -> 8
+    assert d.mesh.shape == (8, 16)
+    assert d.microbatch_scale == 2
+
+
+def test_policy_cannot_lose_everything():
+    cur = MeshSpec((2, 4, 4), ("pod", "data", "model"))
+    with pytest.raises(ValueError):
+        plan_after_failure(cur, lost_pods=2)
+
+
+def test_restore_onto_smaller_mesh_subprocess():
+    """Train on a 2-pod (2,2,2) mesh, checkpoint, 'lose a pod', resume on
+    (2,2) with doubled accumulation — same global batch, loss continues."""
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import CheckpointManager
+        from repro.configs import get_config
+        from repro.distributed.elastic import MeshSpec, plan_after_failure
+        from repro.distributed.sharding import (batch_specs, make_context,
+                                                param_specs)
+        from repro.train import OptimizerConfig
+        from repro.train.train_step import make_train_state, make_train_step
+
+        cfg = get_config("qwen2-7b").reduced()
+        opt = OptimizerConfig(lr=1e-3, warmup_steps=2)
+        ns = lambda mesh, t: jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+
+        def build(mesh_spec, microbatch):
+            mesh = jax.make_mesh(mesh_spec.shape, mesh_spec.axes)
+            ctx = make_context(mesh, remat="none", q_chunk=32, k_chunk=32)
+            pspec = param_specs(
+                jax.eval_shape(lambda k: make_train_state(k, cfg, opt),
+                               jax.random.PRNGKey(0))["params"], mesh)
+            sspec = {"params": pspec, "opt": {"mu": pspec, "nu": pspec},
+                     "step": P()}
+            fn = jax.jit(make_train_step(cfg, ctx, opt,
+                                         microbatch=microbatch),
+                         in_shardings=(ns(mesh, sspec), None))
+            return fn
+
+        rng = np.random.RandomState(0)
+        batch = lambda: {"tokens": rng.randint(
+            0, cfg.vocab_size, size=(8, 33)).astype(np.int32)}
+
+        # phase 1: two pods
+        big = MeshSpec((2, 2, 2), ("pod", "data", "model"))
+        step_fn = build(big, microbatch=0)
+        state = make_train_state(jax.random.PRNGKey(0), cfg, opt)
+        for _ in range(3):
+            state, m = step_fn(state, batch())
+        loss_before = float(m["loss"])
+        mgr = CheckpointManager("artifacts/ckpt_elastic")
+        mgr.save(int(state["step"]), state)
+
+        # phase 2: pod failure -> replan -> restore on survivors
+        dec = plan_after_failure(big, lost_pods=1)
+        assert dec.mesh.shape == (2, 2) and dec.microbatch_scale == 2
+        step_fn2 = build(dec.mesh, microbatch=8 // dec.microbatch_scale)
+        like = make_train_state(jax.random.PRNGKey(0), cfg, opt)
+        st, restored, _ = mgr.restore_latest(like=like)
+        state2 = jax.tree_util.tree_map(jnp.asarray, restored)
+        for _ in range(2):
+            state2, m2 = step_fn2(state2, batch())
+        assert int(state2["step"]) == st + 2
+        assert np.isfinite(float(m2["loss"]))
+        print("ELASTIC_OK", loss_before, float(m2["loss"]))
+    """
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=420,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       cwd="/root/repo")
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "ELASTIC_OK" in p.stdout

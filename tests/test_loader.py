@@ -1,0 +1,123 @@
+"""Loader subsystem: batching, skip ledger, checkpointable state, sharding,
+straggler mode, autotuner, process pool, eligibility policy."""
+import numpy as np
+import pytest
+
+from repro.data.autotune import autotune_workers
+from repro.data.loader import DataLoader, LoaderConfig, center_fit
+from repro.jpeg.paths import DECODE_PATHS
+
+FAST = DECODE_PATHS["numpy-fast"]
+STRICT = DECODE_PATHS["strict-fast"]
+
+
+def mkloader(corpus, path=FAST, **kw):
+    kw.setdefault("batch_size", 5)
+    cfg = LoaderConfig(**kw)
+    return DataLoader(corpus.files, corpus.labels, path.decode, cfg,
+                      path_name=path.name)
+
+
+def test_batching_shapes_and_coverage(corpus):
+    dl = mkloader(corpus)
+    total = 0
+    for batch in dl:
+        assert batch["image"].dtype == np.uint8
+        assert batch["image"].shape[1:] == (64, 64, 3)
+        assert batch["image"].shape[0] == batch["label"].shape[0]
+        total += batch["image"].shape[0]
+    assert total == len(corpus.files)
+
+
+def test_skip_ledger_strict(corpus):
+    dl = mkloader(corpus, path=STRICT)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(corpus.files) - 1
+    assert dl.ledger.indices() == [corpus.rare_index]
+
+
+@pytest.mark.parametrize("workers,mode", [(2, "thread"), (2, "process")])
+def test_worker_modes_deliver_everything(corpus, workers, mode):
+    dl = mkloader(corpus, num_workers=workers, mode=mode)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(corpus.files)
+
+
+def test_thread_mode_preserves_order(corpus):
+    dl0 = mkloader(corpus)
+    dl2 = mkloader(corpus, num_workers=2)
+    b0 = np.concatenate([b["label"] for b in dl0])
+    b2 = np.concatenate([b["label"] for b in dl2])
+    np.testing.assert_array_equal(b0, b2)
+
+
+def test_process_mode_rejects_jax_paths(corpus):
+    dl = mkloader(corpus, path=DECODE_PATHS["jnp-fused"], num_workers=2,
+                  mode="process")
+    with pytest.raises(RuntimeError, match="not process-loader eligible"):
+        next(iter(dl))
+
+
+def test_checkpointable_iterator_state(corpus):
+    dl = mkloader(corpus, batch_size=4)
+    it = iter(dl)
+    next(it)
+    next(it)
+    state = dl.state()
+    assert state["cursor"] == 8
+    dl2 = mkloader(corpus, batch_size=4)
+    dl2.restore(state)
+    rest = [b["label"] for b in dl2]
+    # remaining items only
+    assert sum(len(l) for l in rest) == len(corpus.files) - 8
+
+
+def test_sharding_partition(corpus):
+    a = mkloader(corpus, shard_index=0, shard_count=2)
+    b = mkloader(corpus, shard_index=1, shard_count=2)
+    la = np.concatenate([x["label"] for x in a])
+    lb = np.concatenate([x["label"] for x in b])
+    assert len(la) + len(lb) == len(corpus.files)
+
+
+def test_straggler_backup_mode(corpus):
+    dl = mkloader(corpus, num_workers=2, straggler_backup=True,
+                  straggler_factor=50.0)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(corpus.files)
+
+
+def test_straggler_backup_recovers_slow_items(corpus):
+    import time
+    calls = {"n": 0}
+    slow_once = {"done": False}
+
+    def decode(data):
+        calls["n"] += 1
+        if not slow_once["done"] and calls["n"] == 10:
+            slow_once["done"] = True
+            time.sleep(0.5)      # one pathological straggler
+        return FAST.decode(data)
+
+    cfg = LoaderConfig(batch_size=4, num_workers=2, straggler_backup=True,
+                       straggler_factor=2.0)
+    dl = DataLoader(corpus.files, corpus.labels, decode, cfg)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(corpus.files)
+
+
+def test_autotuner_returns_member_of_candidates(corpus):
+    def factory(w):
+        return mkloader(corpus, num_workers=w)
+    res = autotune_workers(factory, candidates=(0, 2), max_items=10,
+                           repeats=1)
+    assert res["best"] in (0, 2)
+    assert set(res["sweep"]) == {0, 2}
+
+
+def test_center_fit_properties():
+    img = np.arange(5 * 7 * 3, dtype=np.uint8).reshape(5, 7, 3)
+    out = center_fit(img, 8, 4)
+    assert out.shape == (8, 4, 3)
+    out2 = center_fit(img, 4, 4)
+    assert out2.shape == (4, 4, 3)

@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats
+from repro.data.loader import center_fit
+from repro.distributed.compression import (dequantize_int8, quantize_int8)
+from repro.jpeg import tables as T
+from repro.jpeg.encoder import BitWriter, _magnitude
+from repro.jpeg.huffman import BitReader, _extend
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@given(st.integers(min_value=-2047, max_value=2047))
+@settings(**SETTINGS)
+def test_magnitude_extend_roundtrip(v):
+    size, bits = _magnitude(v)
+    assert _extend(bits, size) == v
+    assert size <= 11
+
+
+@given(st.lists(st.tuples(st.integers(0, 0xFFFF),
+                          st.integers(1, 16)), min_size=1, max_size=60))
+@settings(**SETTINGS)
+def test_bitstream_roundtrip(items):
+    bw = BitWriter()
+    for code, length in items:
+        bw.write(code, length)
+    data = bw.flush()
+    br = BitReader(data)
+    for code, length in items:
+        assert br.get(length) == code & ((1 << length) - 1)
+
+
+def test_zigzag_is_permutation():
+    assert sorted(T.ZIGZAG.tolist()) == list(range(64))
+    nat = np.arange(64)
+    zz = nat[T.ZIGZAG]
+    back = np.empty(64, np.int64)
+    back[T.ZIGZAG] = zz
+    np.testing.assert_array_equal(back, nat)
+
+
+def test_huffman_codes_prefix_free():
+    for bits, vals in [(T.DC_LUMA_BITS, T.DC_LUMA_VALS),
+                       (T.AC_LUMA_BITS, T.AC_LUMA_VALS),
+                       (T.DC_CHROMA_BITS, T.DC_CHROMA_VALS),
+                       (T.AC_CHROMA_BITS, T.AC_CHROMA_VALS)]:
+        codes = T.canonical_codes(bits, vals)
+        items = [(format(c, f"0{l}b")) for c, l in codes.values()]
+        for i, a in enumerate(items):
+            for j, b in enumerate(items):
+                if i != j:
+                    assert not b.startswith(a)
+
+
+def test_huffman_lut_matches_canonical():
+    for bits, vals in [(T.DC_LUMA_BITS, T.DC_LUMA_VALS),
+                       (T.AC_CHROMA_BITS, T.AC_CHROMA_VALS)]:
+        codes = T.canonical_codes(bits, vals)
+        sym, ln = T.decode_lut(bits, vals)
+        for s, (code, length) in codes.items():
+            w = code << (16 - length)
+            assert sym[w] == s and ln[w] == length
+
+
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 32),
+       st.integers(1, 32))
+@settings(**SETTINGS)
+def test_center_fit_shape(h, w, th, tw):
+    img = np.zeros((h, w, 3), np.uint8)
+    out = center_fit(img, th, tw)
+    assert out.shape == (th, tw, 3)
+
+
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                          allow_nan=False), min_size=2, max_size=30))
+@settings(**SETTINGS)
+def test_spearman_bounds_and_self(xs):
+    rho = stats.spearman_rho(xs, xs)
+    assert -1.0000001 <= rho <= 1.0000001
+    if len(set(xs)) > 1:
+        assert rho > 0.99
+
+
+@given(st.lists(st.floats(min_value=-10, max_value=10, allow_nan=False,
+                          width=32), min_size=1, max_size=50))
+@settings(**SETTINGS)
+def test_int8_quantization_error_bound(vals):
+    x = np.asarray(vals, np.float32)
+    q, scale = quantize_int8(x)
+    deq = np.asarray(dequantize_int8(q, scale))
+    amax = np.abs(x).max()
+    assert np.abs(deq - x).max() <= amax / 127.0 + 1e-6
+
+
+@given(st.permutations(list(range(6))))
+@settings(**SETTINGS)
+def test_rank_moves_permutation(perm):
+    single = {f"d{i}": float(10 - i) for i in range(6)}
+    loader = {f"d{i}": float(10 - perm[i]) for i in range(6)}
+    moves = stats.rank_moves(single, loader)
+    srs = sorted(m[0] for m in moves.values())
+    lrs = sorted(m[1] for m in moves.values())
+    assert srs == lrs == [1, 2, 3, 4, 5, 6]

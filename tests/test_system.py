@@ -1,0 +1,107 @@
+"""End-to-end system behaviour: JPEG corpus -> multi-worker loader -> ViT
+training with checkpoint/restart; protocol pipeline on live measurements."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import decision
+from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
+from repro.data.loader import DataLoader, LoaderConfig
+from repro.jpeg.corpus import build_corpus
+from repro.jpeg.paths import DECODE_PATHS
+from repro.models import vision
+from repro.models.layers import ModelContext
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update
+
+
+def _train(state, loader, cfg, steps, ctx=ModelContext(q_chunk=64,
+                                                       k_chunk=64)):
+    @jax.jit
+    def step_fn(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            vision.loss_fn, has_aux=True)(state["params"], batch, cfg, ctx)
+        params, opt, _ = adamw_update(grads, state["opt"], state["params"],
+                                      state["step"], OptimizerConfig(
+                                          lr=3e-3, warmup_steps=5))
+        return dict(params=params, opt=opt, step=state["step"] + 1), metrics
+
+    losses = []
+    done = 0
+    while done < steps:
+        for batch in loader:
+            batch = {"image": jnp.asarray(batch["image"]),
+                     "label": jnp.asarray(batch["label"])}
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+            done += 1
+            if done >= steps:
+                break
+    return state, losses
+
+
+def test_end_to_end_training_learns(tmp_path):
+    corpus = build_corpus(48, seed=11, num_classes=4)
+    cfg = vision.ViTConfig(num_classes=4, num_layers=2, d_model=64,
+                           num_heads=2, num_kv_heads=2, head_dim=32,
+                           d_ff=128)
+    params = vision.init(jax.random.PRNGKey(0), cfg)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    loader = DataLoader(corpus.files, corpus.labels,
+                        DECODE_PATHS["numpy-fast"].decode,
+                        LoaderConfig(batch_size=16, num_workers=2))
+    state, losses = _train(state, loader, cfg, steps=30)
+    assert np.isfinite(losses).all()
+    # memorizing 48 images x 4 labels: loss must drop substantially
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.8, \
+        (np.mean(losses[:5]), np.mean(losses[-5:]))
+
+
+def test_checkpoint_restart_mid_training(tmp_path):
+    corpus = build_corpus(24, seed=13, num_classes=3)
+    cfg = vision.ViTConfig(num_classes=3, num_layers=1, d_model=64,
+                           num_heads=2, num_kv_heads=2, head_dim=32,
+                           d_ff=128)
+    params = vision.init(jax.random.PRNGKey(1), cfg)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    loader = DataLoader(corpus.files, corpus.labels,
+                        DECODE_PATHS["numpy-fast"].decode,
+                        LoaderConfig(batch_size=12))
+    state, _ = _train(state, loader, cfg, steps=4)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, state, extra={"loader": loader.state()})
+
+    # "node failure": rebuild everything from disk
+    like = {"params": vision.init(jax.random.PRNGKey(1), cfg),
+            "opt": adamw_init(params), "step": jnp.zeros((), jnp.int32)}
+    step, restored, extra = mgr.restore_latest(like=like)
+    assert step == 4
+    loader2 = DataLoader(corpus.files, corpus.labels,
+                         DECODE_PATHS["numpy-fast"].decode,
+                         LoaderConfig(batch_size=12))
+    loader2.restore(extra["loader"])
+    restored = jax.tree_util.tree_map(jnp.asarray, restored)
+    state2, losses = _train(restored, loader2, cfg, steps=3)
+    assert int(state2["step"]) == 7
+    assert np.isfinite(losses).all()
+
+
+def test_live_protocol_to_decision_pipeline():
+    """The full paper pipeline on live data: measure both protocols,
+    produce records, run the decision engine."""
+    corpus = build_corpus(10, seed=17)
+    st = SingleThreadProtocol(corpus, repeats=2)
+    recs = st.run(["numpy-fast", "numpy-int", "strict-fast"])
+    lp = LoaderProtocol(corpus, repeats=1)
+    for name in ["numpy-fast", "numpy-int", "strict-fast"]:
+        for w in (0, 2):
+            recs.append(lp.run_path(DECODE_PATHS[name], w))
+    rec = decision.recommend(recs)
+    assert "live-host" in rec["protocol_disagreement"]
+    tier_names = [t.decoder for t in rec["tier"]]
+    assert "strict-fast" not in tier_names     # skipped the rare image
+    d = rec["protocol_disagreement"]["live-host"]
+    assert -1.0 <= d["rho"] <= 1.0
