@@ -15,8 +15,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (fig3_tf_penalty, kernels_bench, roofline,
-                            table1_guide, table2_protocol, table3_workers,
-                            table4_tiers, table5_guide)
+                            service_bench, table1_guide, table2_protocol,
+                            table3_workers, table4_tiers, table5_guide)
     benches = [
         ("table1", table1_guide),
         ("table2", table2_protocol),
@@ -26,6 +26,7 @@ def main() -> None:
         ("fig3", fig3_tf_penalty),
         ("kernels", kernels_bench),
         ("roofline", roofline),
+        ("service", service_bench),
     ]
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -114,9 +114,10 @@ def main():
     mgr.wait()
     mgr.save(done, state, extra={"loader": loader.state()})
     wall = time.time() - t0
+    share = (100 * t_data / (t_data + t_step)) if t_data + t_step else 0.0
     print(f"\n{done} steps in {wall:.1f}s; loader time {t_data:.1f}s, "
           f"step time {t_step:.1f}s -> input-pipeline share "
-          f"{100 * t_data / (t_data + t_step):.0f}%")
+          f"{share:.0f}%")
     print("(when that share is large, the paper's loader protocol — not a "
           "single-thread decoder table — is the evidence that matters)")
 

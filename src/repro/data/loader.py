@@ -26,6 +26,7 @@ import queue
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -62,13 +63,16 @@ class SkipLedger:
 
     @property
     def count(self) -> int:
-        return len(self.skips)
+        with self._lock:
+            return len(self.skips)
 
     def indices(self) -> List[int]:
-        return sorted(i for i, _ in self.skips)
+        with self._lock:
+            return sorted(i for i, _ in self.skips)
 
     def state(self) -> list:
-        return list(self.skips)
+        with self._lock:
+            return list(self.skips)
 
     def restore(self, state) -> None:
         self.skips = [tuple(s) for s in state]
@@ -119,30 +123,29 @@ class DataLoader:
         self.ledger = SkipLedger()
         self.epoch = 0
         self.cursor = 0
-        self._rng = np.random.RandomState(cfg.seed)
         self._latencies: List[float] = []
 
     # ------------------------------------------------------------ state
     def state(self) -> Dict[str, Any]:
         return {"epoch": self.epoch, "cursor": self.cursor,
                 "skips": self.ledger.state(),
-                "rng": self._rng.get_state()[1].tolist(),
                 "seed": self.cfg.seed}
 
     def restore(self, state: Dict[str, Any]) -> None:
         self.epoch = state["epoch"]
         self.cursor = state["cursor"]
         self.ledger.restore(state["skips"])
-        st = self._rng.get_state()
-        self._rng.set_state((st[0], np.array(state["rng"], dtype=np.uint32),
-                             624, 0, 0.0))
 
     # ------------------------------------------------------------ order
     def _epoch_order(self) -> np.ndarray:
+        # the permutation is a pure function of (seed, epoch): a restored
+        # loader regenerates the interrupted epoch's exact order and
+        # resumes at the cursor, instead of re-drawing from a mutable RNG
+        # (which replayed/dropped items when resuming a shuffled epoch)
         idx = np.arange(len(self.files))
         idx = idx[self.cfg.shard_index::self.cfg.shard_count]
         if self.cfg.shuffle:
-            self._rng.shuffle(idx)
+            np.random.RandomState([self.cfg.seed, self.epoch]).shuffle(idx)
         return idx
 
     # ------------------------------------------------------------ decode
@@ -153,11 +156,20 @@ class DataLoader:
             self.ledger.record(i, f"{type(e).__name__}: {e}")
             return None
 
+    def _decode_quiet(self, i: int):
+        """Decode without touching the ledger: (img, err). The thread
+        iterator records skips at emission time, so a straggler primary
+        racing its backup dispatch cannot double-record one index."""
+        try:
+            return self.decode_fn(self.files[i]), None
+        except (UnsupportedJpeg, CorruptJpeg) as e:
+            return None, f"{type(e).__name__}: {e}"
+
     def _iter_decoded_sync(self, order):
+        # yields (index, img-or-None): skips surface as None so the
+        # consumer can advance the checkpoint cursor past them
         for i in order:
-            img = self._decode_one(int(i))
-            if img is not None:
-                yield int(i), img
+            yield int(i), self._decode_one(int(i))
 
     def _iter_decoded_threads(self, order):
         cfg = self.cfg
@@ -174,7 +186,7 @@ class DataLoader:
             while emit < len(order):
                 while pos < len(order) and len(pending) < inflight:
                     i = order[pos]
-                    pending[pos] = ex.submit(self._decode_one, i)
+                    pending[pos] = ex.submit(self._decode_quiet, i)
                     submit_t[pos] = time.monotonic()
                     pos += 1
                 fut = pending[emit]
@@ -185,30 +197,36 @@ class DataLoader:
                     if budget is not None:
                         waited = time.monotonic() - submit_t[emit]
                         try:
-                            img = fut.result(
+                            img, err = fut.result(
                                 timeout=max(budget - waited, 1e-3))
-                        except Exception:
+                        except FutureTimeout:
                             # backup dispatch: race a second attempt
                             b = backup_ex.submit(
-                                self._decode_one, order[emit])
-                            img = b.result()
+                                self._decode_quiet, order[emit])
+                            img, err = b.result()
                             fut.cancel()
-                        self._note(submit_t.pop(emit))
+                        yield from self._emit_one(order[emit], img, err,
+                                                  submit_t.pop(emit))
                         del pending[emit]
-                        if img is not None:
-                            yield order[emit], img
                         emit += 1
                         continue
-                img = fut.result()
-                self._note(submit_t.pop(emit))
+                img, err = fut.result()
+                yield from self._emit_one(order[emit], img, err,
+                                          submit_t.pop(emit))
                 del pending[emit]
-                if img is not None:
-                    yield order[emit], img
                 emit += 1
         finally:
             ex.shutdown(wait=False, cancel_futures=True)
             if backup_ex:
                 backup_ex.shutdown(wait=False, cancel_futures=True)
+
+    def _emit_one(self, i: int, img, err, t0: float):
+        self._note(t0)
+        if err is not None:
+            self.ledger.record(i, err)
+            yield i, None
+        else:
+            yield i, img
 
     def _note(self, t0: float) -> None:
         self._latencies.append(time.monotonic() - t0)
@@ -232,7 +250,8 @@ class DataLoader:
                     chunksize=max(1, self.cfg.prefetch)):
                 if err is not None:
                     self.ledger.record(i, err)
-                elif img is not None:
+                    yield i, None
+                else:
                     yield i, img
 
     # ------------------------------------------------------------ iterate
@@ -251,9 +270,13 @@ class DataLoader:
         th, tw = cfg.target_hw
         imgs, labs = [], []
         for i, img in decoded:
+            # the cursor counts consumed epoch positions, including skips —
+            # otherwise restoring after a skip replays/shifts the epoch order
+            self.cursor += 1
+            if img is None:
+                continue
             imgs.append(center_fit(img, th, tw))
             labs.append(self.labels[i])
-            self.cursor += 1
             if len(imgs) == cfg.batch_size:
                 yield {"image": np.stack(imgs),
                        "label": np.asarray(labs, np.int32)}
@@ -266,20 +289,49 @@ class DataLoader:
 
 
 def prefetch_to_device(iterator, size: int = 2):
-    """Host->device double buffering (overlaps H2D copy with compute)."""
+    """Host->device double buffering (overlaps H2D copy with compute).
+
+    Producer failures propagate: the sentinel is enqueued in a ``finally``
+    (so the consumer can never block forever on a dead producer) and any
+    producer exception is re-raised in the consumer thread. Abandoning the
+    generator early (break / close) stops the producer too, instead of
+    leaving it blocked forever on a full queue pinning device buffers.
+    """
     import jax
     buf = queue.Queue(maxsize=size)
     sentinel = object()
+    stop = threading.Event()
+    error: List[BaseException] = []
+
+    def _put(item) -> bool:
+        while not stop.is_set():
+            try:
+                buf.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def producer():
-        for item in iterator:
-            buf.put(jax.device_put(item))
-        buf.put(sentinel)
+        try:
+            for item in iterator:
+                if not _put(jax.device_put(item)):
+                    return               # consumer abandoned the generator
+        except BaseException as e:
+            error.append(e)
+        finally:
+            _put(sentinel)
 
-    t = threading.Thread(target=producer, daemon=True)
+    t = threading.Thread(target=producer, daemon=True,
+                         name="prefetch-producer")
     t.start()
-    while True:
-        item = buf.get()
-        if item is sentinel:
-            return
-        yield item
+    try:
+        while True:
+            item = buf.get()
+            if item is sentinel:
+                if error:
+                    raise error[0]
+                return
+            yield item
+    finally:
+        stop.set()                       # unblocks a producer mid-put

@@ -50,6 +50,17 @@ def scaled_rare_index(n: int) -> int:
     return int(RARE_INDEX_IMAGENET / IMAGENET_VAL_SIZE * n)
 
 
+def zipf_indices(n_items: int, n_requests: int,
+                 seed: int = 0) -> np.ndarray:
+    """Zipf-ish request mix over a corpus: a hot set dominates — the
+    online-service traffic model used by the decode-service demo and
+    benchmark."""
+    rng = np.random.RandomState(seed)
+    ranks = np.arange(1, n_items + 1, dtype=np.float64)
+    probs = (1.0 / ranks) / (1.0 / ranks).sum()
+    return rng.choice(n_items, size=n_requests, p=probs)
+
+
 def build_corpus(n: int = 200, *, seed: int = 0,
                  sizes: Optional[List[Tuple[int, int]]] = None,
                  num_classes: int = 10) -> Corpus:

@@ -1,4 +1,5 @@
-"""The thirteen decode paths (the paper's thirteen decoder analogues).
+"""The fourteen decode paths (the paper's thirteen decoder analogues plus
+one beyond-paper optimization).
 
 Every path is bytes -> RGB uint8 [H, W, 3] over the same codec substrate,
 differing in transform engine (numpy / jnp / Pallas), fusion/jit level,
@@ -10,6 +11,7 @@ paper's evaluation surface:
   numpy-ref       numpy     separable float IDCT (oracle)           no
   numpy-fast      numpy     Kronecker 64x64 GEMM IDCT               no
   numpy-int       numpy     13-bit fixed-point IDCT (libjpeg-ish)   no
+  numpy-sparse    numpy     DC-shortcut sparse IDCT (beyond-paper)  no
   jnp-basic       jnp       eager per-stage dispatch                no
   jnp-jit         jnp       jit, separable IDCT                     no
   jnp-fused       jnp       jit, single fused transform             no
@@ -29,7 +31,7 @@ harness".
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -238,3 +240,22 @@ _register("numpy-sparse", _numpy_sparse, engine="numpy",
 
 def get_path(name: str) -> DecodePath:
     return DECODE_PATHS[name]
+
+
+def list_paths(process_eligible: Optional[bool] = None,
+               strict: Optional[bool] = None) -> List[DecodePath]:
+    """Query registered paths by eligibility attributes (None = any).
+
+    The service router uses this to scope its arm set, e.g.
+    ``list_paths(strict=False)`` for fallback-capable arms or
+    ``list_paths(process_eligible=True)`` for fork-safe deployments.
+    """
+    out = []
+    for p in DECODE_PATHS.values():
+        if process_eligible is not None \
+                and p.process_eligible != process_eligible:
+            continue
+        if strict is not None and p.strict != strict:
+            continue
+        out.append(p)
+    return out

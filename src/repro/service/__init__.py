@@ -1,0 +1,22 @@
+"""Online JPEG decode service (see DESIGN.md §service).
+
+The paper's protocol turned into a runtime: an async micro-batching
+engine serving decode requests through the 14 registered paths, with a
+bandit router that learns per-path service throughput in situ and the
+skip ledger promoted from accounting to a routing signal.
+"""
+from repro.service.admission import AdmissionController, ServiceOverloaded
+from repro.service.batcher import Batch, MicroBatcher, bucket_key
+from repro.service.cache import DecodeCache, content_key
+from repro.service.engine import DecodeService, ServiceConfig, ServiceShutdown
+from repro.service.metrics import RollingWindow, ServiceMetrics
+from repro.service.router import BanditRouter
+
+__all__ = [
+    "AdmissionController", "ServiceOverloaded",
+    "Batch", "MicroBatcher", "bucket_key",
+    "DecodeCache", "content_key",
+    "DecodeService", "ServiceConfig", "ServiceShutdown",
+    "RollingWindow", "ServiceMetrics",
+    "BanditRouter",
+]

@@ -1,0 +1,79 @@
+"""Admission control: load shedding + per-client fairness at saturation.
+
+When offered load exceeds service capacity the failure mode must be an
+explicit, cheap rejection — never an unbounded queue (latency collapse)
+or a blocked producer graph (deadlock). Two gates, checked at submit:
+
+1. *Global* — total in-flight requests may not exceed ``max_inflight``.
+2. *Fair share* — once the system is congested (in-flight beyond the
+   ``congestion`` fraction of budget), one client may not hold more than
+   ``max_inflight / (active_clients + 1)`` slots — the ``+1`` reserves
+   headroom for a newcomer, so a greedy client can neither starve polite
+   ones nor lock out a client that hasn't arrived yet. Below congestion
+   any client may use spare budget.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Tuple
+
+
+class ServiceOverloaded(RuntimeError):
+    """Raised to a client whose request was shed at admission."""
+
+
+class AdmissionController:
+    def __init__(self, max_inflight: int = 64, *,
+                 congestion: float = 0.75):
+        if max_inflight <= 0:
+            raise ValueError("max_inflight must be positive")
+        self.max_inflight = int(max_inflight)
+        self.congestion = float(congestion)
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, int] = {}     # client -> held slots
+        self._total = 0
+        self.rejected_total = 0
+        self.rejected_fairness = 0
+
+    # ------------------------------------------------------------ gates
+    def _fair_share(self) -> int:
+        active = max(1, len([c for c, n in self._inflight.items() if n > 0]))
+        return max(1, self.max_inflight // (active + 1))
+
+    def try_admit(self, client: str) -> Tuple[bool, str]:
+        """Reserve a slot for ``client``; (ok, reason-if-shed)."""
+        with self._lock:
+            if self._total >= self.max_inflight:
+                self.rejected_total += 1
+                return False, "queue saturated"
+            held = self._inflight.get(client, 0)
+            congested = self._total >= self.congestion * self.max_inflight
+            if congested and held >= self._fair_share():
+                self.rejected_fairness += 1
+                return False, "client over fair share"
+            self._inflight[client] = held + 1
+            self._total += 1
+            return True, ""
+
+    def release(self, client: str) -> None:
+        with self._lock:
+            held = self._inflight.get(client, 0)
+            if held <= 1:
+                self._inflight.pop(client, None)
+            else:
+                self._inflight[client] = held - 1
+            self._total = max(0, self._total - 1)
+
+    # ------------------------------------------------------------ stats
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._total
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"inflight": self._total,
+                    "active_clients": len(self._inflight),
+                    "max_inflight": self.max_inflight,
+                    "rejected_total": self.rejected_total,
+                    "rejected_fairness": self.rejected_fairness}

@@ -1,0 +1,298 @@
+"""The online decode service: request queue, worker pool, bounded
+in-flight budget, backpressure, and graceful shutdown.
+
+Dataflow (all hand-offs through bounded queues, so overload surfaces as
+explicit shedding at admission — never as unbounded memory or deadlock):
+
+    client --submit()--> [admission] --> inbound q --> batcher thread
+        --> shape-bucketed micro-batches --> batch q --> worker pool
+        --> router-picked decode path --> future.set_result
+
+* ``submit`` returns a ``concurrent.futures.Future`` immediately; the
+  decode result cache is consulted first (hits resolve synchronously),
+  then the admission controller either reserves an in-flight slot or
+  raises ``ServiceOverloaded``.
+* The batcher thread groups requests by padded-MCU-grid bucket (warm
+  compile caches for jitted paths) and flushes on fill or deadline.
+* Each worker serves one batch at a time through the path chosen by the
+  bandit router, feeds measured throughput back to the router, and
+  retries strict-path ``UnsupportedJpeg`` refusals on the router's
+  non-strict fallback — so the skip ledger becomes a routing signal and
+  clients still get pixels for rare JPEG modes.
+* ``num_workers=0`` decodes inline in the caller thread (the service
+  analogue of the loader's ``num_workers=0`` protocol arm), which is what
+  ``benchmarks/service_bench.py`` compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.jpeg.parser import UnsupportedJpeg
+from repro.jpeg.paths import DecodePath
+from repro.service.admission import AdmissionController, ServiceOverloaded
+from repro.service.batcher import Batch, MicroBatcher, bucket_key
+from repro.service.cache import DecodeCache, content_key
+from repro.service.metrics import ServiceMetrics
+from repro.service.router import BanditRouter
+
+
+class ServiceShutdown(RuntimeError):
+    """Raised into futures that cannot be served because the service
+    stopped (non-graceful) or to submitters after close."""
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    num_workers: int = 2            # 0 = decode inline in the caller
+    max_inflight: int = 64          # admission budget (backpressure bound)
+    max_batch: int = 8              # micro-batch fill target
+    max_wait_ms: float = 5.0        # micro-batch deadline
+    bucket_granularity: int = 4     # MCU-grid rounding for bucket identity
+    cache_bytes: int = 32 << 20     # decode result cache budget; 0 = off
+    policy: str = "ucb"             # router policy: ucb | epsilon
+    epsilon: float = 0.1
+    seed: int = 0
+    congestion: float = 0.75        # fairness kicks in past this fill
+
+
+@dataclasses.dataclass
+class _Request:
+    data: bytes
+    client: str
+    future: Future
+    t_submit: float
+    cache_key: Optional[bytes] = None
+
+
+_STOP = object()
+
+
+class DecodeService:
+    """Async batched JPEG decode service over the registered paths."""
+
+    def __init__(self, cfg: Optional[ServiceConfig] = None, *,
+                 paths: Optional[Sequence[DecodePath]] = None,
+                 router: Optional[BanditRouter] = None):
+        self.cfg = cfg or ServiceConfig()
+        self.router = router or BanditRouter(
+            paths, policy=self.cfg.policy, epsilon=self.cfg.epsilon,
+            seed=self.cfg.seed)
+        self.admission = AdmissionController(
+            self.cfg.max_inflight, congestion=self.cfg.congestion)
+        self.cache = (DecodeCache(self.cfg.cache_bytes)
+                      if self.cfg.cache_bytes > 0 else None)
+        self.metrics = ServiceMetrics(queue_depth_fn=self._queue_depth)
+        self.batcher = MicroBatcher(self.cfg.max_batch,
+                                    self.cfg.max_wait_ms / 1e3)
+        self._inbound: "queue.Queue" = queue.Queue()
+        self._batchq: "queue.Queue" = queue.Queue(
+            maxsize=max(2, 2 * max(1, self.cfg.num_workers)))
+        self._threads: List[threading.Thread] = []
+        self._submit_lock = threading.Lock()
+        self._started = False
+        self._closed = False
+        self._abort = False
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "DecodeService":
+        if self._started:
+            return self
+        self._started = True
+        if self.cfg.num_workers > 0:
+            t = threading.Thread(target=self._batcher_loop,
+                                 name="svc-batcher", daemon=True)
+            t.start()
+            self._threads.append(t)
+            for k in range(self.cfg.num_workers):
+                t = threading.Thread(target=self._worker_loop,
+                                     name=f"svc-worker-{k}", daemon=True)
+                t.start()
+                self._threads.append(t)
+        return self
+
+    def stop(self, graceful: bool = True) -> None:
+        if not self._started or self._closed:
+            self._closed = True
+            return
+        if not graceful:
+            self._abort = True
+        with self._submit_lock:
+            self._closed = True
+            if self.cfg.num_workers > 0:
+                self._inbound.put(_STOP)
+        if self.cfg.num_workers > 0:
+            self._threads[0].join()               # batcher drains + flushes
+            for _ in range(self.cfg.num_workers):
+                self._batchq.put(_STOP)
+            for t in self._threads[1:]:
+                t.join()
+
+    def __enter__(self) -> "DecodeService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(graceful=not any(exc))
+
+    # ------------------------------------------------------------ submit
+    def submit(self, data: bytes, client: str = "anon") -> Future:
+        """Enqueue one decode; returns a Future of RGB uint8 [H, W, 3].
+
+        Raises ServiceOverloaded when shed at admission, ServiceShutdown
+        after close. Never blocks the caller on service-side queues.
+        """
+        if self._closed or not self._started:
+            raise ServiceShutdown("service is not accepting requests")
+        self.metrics.record_request()
+        fut: Future = Future()
+        key = None
+        if self.cache is not None:
+            key = content_key(data)
+            img = self.cache.get(key)
+            if img is not None:
+                self.metrics.record_cache_hit()
+                fut.set_result(img)
+                return fut
+        ok, reason = self.admission.try_admit(client)
+        if not ok:
+            self.metrics.record_shed()
+            raise ServiceOverloaded(reason)
+        req = _Request(data, client, fut, time.monotonic(), key)
+        if self.cfg.num_workers == 0:
+            self._serve_batch(Batch(key=None, items=[req],
+                                    oldest_t=req.t_submit))
+        else:
+            # re-check closed under the same lock stop() uses to enqueue
+            # _STOP, so no request can ever land behind the sentinel
+            # (where the exited batcher would never see it)
+            with self._submit_lock:
+                if self._closed:
+                    self.admission.release(client)
+                    raise ServiceShutdown(
+                        "service is not accepting requests")
+                self._inbound.put(req)
+        return fut
+
+    def decode(self, data: bytes, client: str = "anon") -> np.ndarray:
+        """Blocking convenience wrapper around submit()."""
+        return self.submit(data, client).result()
+
+    # ------------------------------------------------------------ batcher
+    def _batcher_loop(self) -> None:
+        gran = self.cfg.bucket_granularity
+        while True:
+            timeout = self.batcher.next_deadline(time.monotonic())
+            try:
+                item = self._inbound.get(timeout=timeout)
+            except queue.Empty:
+                item = None
+            if item is _STOP:
+                for b in self.batcher.flush_all():
+                    self._batchq.put(b)
+                return
+            if item is not None:
+                try:
+                    key = bucket_key(item.data, gran)
+                except Exception as e:       # CorruptJpeg, truncated headers
+                    self._fail(item, e)
+                    continue
+                full = self.batcher.add(key, item, time.monotonic())
+                if full is not None:
+                    self._batchq.put(full)
+            for b in self.batcher.take_due(time.monotonic()):
+                self._batchq.put(b)
+
+    # ------------------------------------------------------------ workers
+    def _worker_loop(self) -> None:
+        while True:
+            batch = self._batchq.get()
+            if batch is _STOP:
+                return
+            self._serve_batch(batch)
+
+    def _serve_batch(self, batch: Batch) -> None:
+        if self._abort:
+            for req in batch.items:
+                self._fail(req, ServiceShutdown("aborted"))
+            return
+        path = self.router.pick()
+        refused: List[_Request] = []
+        served_s = 0.0
+        n_ok = 0
+        for req in batch.items:
+            t0 = time.perf_counter()
+            try:
+                img = path.decode(req.data)
+            except UnsupportedJpeg:
+                self.router.record_skip(path.name)
+                self.metrics.record_skip(path.name)
+                refused.append(req)
+                continue
+            except Exception as e:
+                self._fail(req, e)
+                continue
+            served_s += time.perf_counter() - t0
+            n_ok += 1
+            self._fulfil(req, img, path.name)
+        if n_ok and served_s > 0:
+            self.router.update(path.name, n_ok, served_s)
+        for req in refused:
+            self._serve_fallback(req, path)
+
+    def _serve_fallback(self, req: _Request, failed: DecodePath) -> None:
+        fb = self.router.fallback(failed.name)
+        if fb is None:
+            self._fail(req, UnsupportedJpeg(
+                f"{failed.name} refused input and no non-strict "
+                "fallback path is registered"))
+            return
+        t0 = time.perf_counter()
+        try:
+            img = fb.decode(req.data)
+        except Exception as e:
+            self._fail(req, e)
+            return
+        self.router.update(fb.name, 1, time.perf_counter() - t0)
+        self._fulfil(req, img, fb.name)
+
+    # ------------------------------------------------------------ plumbing
+    def _fulfil(self, req: _Request, img: np.ndarray, path_name: str) -> None:
+        if self.cache is not None and req.cache_key is not None:
+            self.cache.put(req.cache_key, img)
+        self.metrics.record_completion(path_name,
+                                       time.monotonic() - req.t_submit)
+        self.admission.release(req.client)
+        try:
+            req.future.set_result(img)
+        except InvalidStateError:        # client cancelled concurrently
+            pass
+
+    def _fail(self, req: _Request, exc: BaseException) -> None:
+        self.metrics.record_failure()
+        self.admission.release(req.client)
+        try:
+            req.future.set_exception(exc)
+        except InvalidStateError:        # client cancelled concurrently
+            pass
+
+    def _queue_depth(self) -> int:
+        return (self._inbound.qsize() + self.batcher.depth()
+                + self._batchq.qsize() * self.cfg.max_batch)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, object]:
+        return {
+            "service": self.metrics.snapshot(),
+            "admission": self.admission.stats(),
+            "cache": self.cache.stats() if self.cache else None,
+            "router": self.router.snapshot(),
+            "router_best": self.router.best(),
+            "batcher": {"emitted": self.batcher.batches_emitted,
+                        "deadline_flushes": self.batcher.deadline_flushes},
+        }

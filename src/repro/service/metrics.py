@@ -1,0 +1,126 @@
+"""Service observability: rolling latency percentiles, throughput, queue
+depth, and per-path hit/skip counters, exportable as JSON.
+
+The paper's protocol argument (measure the deployment context, not the
+component) applies to operations too: the service exposes the same
+delivered-throughput lens the LoaderProtocol uses, but *continuously*,
+over a sliding window, so the router and operators see the live context.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+PERCENTILES = (50.0, 95.0, 99.0)
+
+
+class RollingWindow:
+    """Bounded sample window of (timestamp, value) pairs."""
+
+    def __init__(self, maxlen: int = 2048):
+        self._samples: deque = deque(maxlen=maxlen)
+
+    def add(self, value: float, t: Optional[float] = None) -> None:
+        self._samples.append((time.monotonic() if t is None else t, value))
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def values(self) -> np.ndarray:
+        return np.asarray([v for _, v in self._samples], dtype=np.float64)
+
+    def percentiles(self) -> Dict[str, float]:
+        if not self._samples:
+            return {f"p{int(p)}": 0.0 for p in PERCENTILES}
+        v = self.values()
+        return {f"p{int(p)}": float(np.percentile(v, p))
+                for p in PERCENTILES}
+
+    def rate(self, horizon_s: float = 30.0) -> float:
+        """Events per second over the trailing horizon, estimated from
+        inter-arrival spacing: (n-1) / (last - first). A lone event (or a
+        burst shorter than the clock can resolve) reports 0.0 rather than
+        the near-infinite n/epsilon a naive span division produces."""
+        now = time.monotonic()
+        ts = [t for t, _ in self._samples if now - t <= horizon_s]
+        if len(ts) < 2:
+            return 0.0
+        span = ts[-1] - ts[0]
+        return (len(ts) - 1) / span if span > 0 else 0.0
+
+
+class ServiceMetrics:
+    """Aggregated counters + rolling latency for the decode service."""
+
+    def __init__(self, *, window: int = 2048,
+                 queue_depth_fn: Optional[Callable[[], int]] = None):
+        self._lock = threading.Lock()
+        self._latency = RollingWindow(maxlen=window)
+        self._completions = RollingWindow(maxlen=window)
+        self._queue_depth_fn = queue_depth_fn
+        self.requests = 0
+        self.completed = 0
+        self.failed = 0
+        self.shed = 0
+        self.cache_hits = 0
+        self.path_hits: Dict[str, int] = {}
+        self.path_skips: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ record
+    def record_request(self) -> None:
+        with self._lock:
+            self.requests += 1
+
+    def record_shed(self) -> None:
+        with self._lock:
+            self.shed += 1
+
+    def record_cache_hit(self) -> None:
+        with self._lock:
+            self.cache_hits += 1
+            self.completed += 1
+            self._completions.add(1.0)
+
+    def record_completion(self, path_name: str, latency_s: float) -> None:
+        with self._lock:
+            self.completed += 1
+            self._latency.add(latency_s)
+            self._completions.add(1.0)
+            self.path_hits[path_name] = self.path_hits.get(path_name, 0) + 1
+
+    def record_skip(self, path_name: str) -> None:
+        """A strict path refused an input (the ledger-as-signal event)."""
+        with self._lock:
+            self.path_skips[path_name] = \
+                self.path_skips.get(path_name, 0) + 1
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failed += 1
+
+    # ------------------------------------------------------------ export
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            snap: Dict[str, object] = {
+                "requests": self.requests,
+                "completed": self.completed,
+                "failed": self.failed,
+                "shed": self.shed,
+                "cache_hits": self.cache_hits,
+                "latency_s": self._latency.percentiles(),
+                "throughput_rps": self._completions.rate(),
+                "path_hits": dict(self.path_hits),
+                "path_skips": dict(self.path_skips),
+            }
+        if self._queue_depth_fn is not None:
+            snap["queue_depth"] = int(self._queue_depth_fn())
+        return snap
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 1)
+        return json.dumps(self.snapshot(), **kw)

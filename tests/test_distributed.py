@@ -9,6 +9,8 @@ import textwrap
 import numpy as np
 import pytest
 
+from conftest import requires_slow
+
 from repro.common import hlo
 
 
@@ -88,6 +90,7 @@ def test_param_specs_divisibility_guard():
 
 
 # ----------------------------------------------------- multi-device smoke
+@requires_slow
 def test_train_step_on_small_mesh_subprocess():
     out = _run_sub("""
         import os
@@ -126,6 +129,7 @@ def test_train_step_on_small_mesh_subprocess():
     assert "LOSS_OK" in out
 
 
+@requires_slow
 def test_dryrun_cell_small_mesh_subprocess():
     out = _run_sub("""
         import os

@@ -5,6 +5,8 @@ import textwrap
 
 import pytest
 
+from conftest import requires_slow
+
 from repro.distributed.elastic import MeshSpec, plan_after_failure
 
 
@@ -31,6 +33,7 @@ def test_policy_cannot_lose_everything():
         plan_after_failure(cur, lost_pods=2)
 
 
+@requires_slow
 def test_restore_onto_smaller_mesh_subprocess():
     """Train on a 2-pod (2,2,2) mesh, checkpoint, 'lose a pod', resume on
     (2,2) with doubled accumulation — same global batch, loss continues."""

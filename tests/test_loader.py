@@ -115,6 +115,179 @@ def test_autotuner_returns_member_of_candidates(corpus):
     assert set(res["sweep"]) == {0, 2}
 
 
+def test_straggler_backup_dispatch_races_and_wins(corpus):
+    """Deterministic cover for the budget-timeout -> backup-race -> cancel
+    path: one primary decode stalls past the latency budget; the backup
+    dispatch must serve the item (second call) while the primary hangs."""
+    import threading
+
+    stall = threading.Event()
+    lock = threading.Lock()
+    counts = {}
+    target = corpus.files[9]
+
+    def decode(data):
+        with lock:
+            counts[data] = c = counts.get(data, 0) + 1
+        if data == target and c == 1:
+            stall.wait(timeout=30)       # primary attempt hangs
+        return FAST.decode(data)
+
+    cfg = LoaderConfig(batch_size=4, num_workers=2, straggler_backup=True,
+                       straggler_factor=2.0)
+    dl = DataLoader(corpus.files, corpus.labels, decode, cfg)
+    try:
+        total = sum(b["image"].shape[0] for b in dl)
+    finally:
+        stall.set()                      # release the stalled worker
+    assert total == len(corpus.files)    # delivered exactly once each
+    assert counts[target] == 2           # backup dispatch actually ran
+
+
+def test_prefetch_to_device_propagates_producer_error(corpus):
+    from repro.data.loader import prefetch_to_device
+
+    def exploding():
+        yield {"image": np.zeros((1, 4, 4, 3), np.uint8)}
+        raise RuntimeError("decode pipeline died")
+
+    it = prefetch_to_device(exploding(), size=2)
+    next(it)
+    with pytest.raises(RuntimeError, match="decode pipeline died"):
+        for _ in it:                     # must raise, not block forever
+            pass
+
+
+def test_prefetch_to_device_immediate_producer_error():
+    from repro.data.loader import prefetch_to_device
+
+    def dead():
+        raise ValueError("no data")
+        yield                            # pragma: no cover
+
+    with pytest.raises(ValueError, match="no data"):
+        list(prefetch_to_device(dead(), size=1))
+
+
+def test_prefetch_to_device_stops_producer_on_abandon():
+    import threading
+    import time
+    from repro.data.loader import prefetch_to_device
+
+    def endless():
+        while True:
+            yield {"x": np.zeros((4,), np.uint8)}
+
+    it = prefetch_to_device(endless(), size=1)
+    next(it)
+    it.close()                           # abandon with a full queue
+    for _ in range(100):                 # producer must notice and exit
+        alive = [t for t in threading.enumerate()
+                 if t.name == "prefetch-producer" and t.is_alive()]
+        if not alive:
+            break
+        time.sleep(0.05)
+    assert not alive
+
+
+def test_cursor_advances_past_skips_no_replay(corpus):
+    """Checkpoint-cursor drift: skipped items must advance the cursor, so
+    restore resumes at the right epoch position instead of replaying."""
+    rare = corpus.rare_index
+    dl = mkloader(corpus, path=STRICT, batch_size=4)
+    it = iter(dl)
+    seen = list(next(it)["label"]) + list(next(it)["label"])
+    # the batch yields right after the 8th delivered image, so the skip is
+    # consumed by then only if it sits among the first 8 epoch positions
+    consumed = 8 + (1 if rare < 8 else 0)
+    assert dl.state()["cursor"] == consumed
+    state = dl.state()
+    dl2 = mkloader(corpus, path=STRICT, batch_size=4)
+    dl2.restore(state)
+    rest = np.concatenate([b["label"] for b in dl2])
+    # resumed epoch delivers exactly the remaining non-skipped items
+    delivered = len(seen) + len(rest)
+    assert delivered == len(corpus.files) - 1
+    expect = [corpus.labels[i] for i in range(len(corpus.files))
+              if i != rare]
+    np.testing.assert_array_equal(np.concatenate([seen, rest]), expect)
+
+
+def test_shuffled_epoch_resumes_exactly(corpus):
+    """The permutation is a pure function of (seed, epoch): restoring
+    mid-epoch under shuffle continues the same order — no replayed and no
+    dropped items."""
+    dl = mkloader(corpus, batch_size=4, shuffle=True, seed=5)
+    it = iter(dl)
+    seen = list(next(it)["label"])
+    state = dl.state()
+    rest_original = [lab for b in it for lab in b["label"]]
+
+    dl2 = mkloader(corpus, batch_size=4, shuffle=True, seed=5)
+    dl2.restore(state)
+    rest_restored = [lab for b in dl2 for lab in b["label"]]
+    np.testing.assert_array_equal(rest_restored, rest_original)
+    assert sorted(seen + rest_restored) == sorted(corpus.labels)
+    # different epochs draw different permutations
+    order0 = mkloader(corpus, shuffle=True, seed=5)._epoch_order()
+    dl3 = mkloader(corpus, shuffle=True, seed=5)
+    dl3.epoch = 1
+    assert list(order0) != list(dl3._epoch_order())
+
+
+def test_straggler_unsupported_item_recorded_once(corpus):
+    """A straggler that is also unsupported must hit the ledger exactly
+    once, even when the backup dispatch races the stalled primary."""
+    import threading
+    import time
+    from repro.jpeg.parser import UnsupportedJpeg
+
+    release = threading.Event()
+    lock = threading.Lock()
+    counts = {}
+    target = corpus.files[10]
+
+    def decode(data):
+        with lock:
+            counts[data] = c = counts.get(data, 0) + 1
+        if data == target:
+            if c == 1:
+                release.wait(timeout=30)   # stall primary past the budget
+            raise UnsupportedJpeg("rare mode")
+        return FAST.decode(data)
+
+    cfg = LoaderConfig(batch_size=4, num_workers=2, straggler_backup=True,
+                       straggler_factor=2.0)
+    dl = DataLoader(corpus.files, corpus.labels, decode, cfg)
+    try:
+        total = sum(b["image"].shape[0] for b in dl)
+    finally:
+        release.set()
+    assert total == len(corpus.files) - 1
+    assert counts[target] == 2                   # backup really dispatched
+    time.sleep(0.1)                              # let the primary unwind
+    assert dl.ledger.indices() == [10]           # recorded exactly once
+
+
+def test_skip_ledger_count_thread_safe(corpus):
+    import threading
+    from repro.data.loader import SkipLedger
+    led = SkipLedger()
+
+    def hammer(k):
+        for j in range(200):
+            led.record(k * 200 + j, "r")
+            assert led.count >= 0
+
+    ts = [threading.Thread(target=hammer, args=(k,)) for k in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert led.count == 800
+    assert len(led.indices()) == 800
+
+
 def test_center_fit_properties():
     img = np.arange(5 * 7 * 3, dtype=np.uint8).reshape(5, 7, 3)
     out = center_fit(img, 8, 4)
