@@ -47,4 +47,54 @@ def run(quick: bool = True):
                  time_us(lambda: np.asarray(ops.ycbcr2rgb(y, y, y)),
                          repeats=2),
                  f"shape={tuple(outc.shape)}"))
+    rows.extend(batched_vs_serial(quick=quick))
     return rows
+
+
+def batched_vs_serial(quick: bool = True):
+    """The tentpole comparison: one batched decode_batch launch over a
+    whole micro-batch's rows (per-row quant-table gather) vs the serial
+    per-image dequant_idct loop the service used to run. jnp refs, so the
+    numbers are CPU-executable (Pallas interpret mode measures the
+    interpreter, not the kernel)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    rows = []
+    batch = 8
+    blocks = 256 if quick else 2048          # blocks per image
+    rng = np.random.RandomState(1)
+    x = (rng.randint(-200, 200, size=(batch * blocks, 64))
+         .astype(np.float32))
+    qt = rng.randint(1, 99, size=(batch, 64)).astype(np.float32)
+    qi = np.repeat(np.arange(batch, dtype=np.int32), blocks)
+
+    xj, qtj, qij = jnp.asarray(x), jnp.asarray(qt), jnp.asarray(qi)
+    jbatch = jax.jit(ref.decode_batch)
+    jser = jax.jit(ref.dequant_idct)
+    jbatch(xj, qij, qtj).block_until_ready()
+    jser(xj[:blocks], qtj[0]).block_until_ready()
+
+    def serial():
+        for b in range(batch):
+            jser(xj[b * blocks:(b + 1) * blocks], qtj[b]).block_until_ready()
+
+    t_b = time_us(lambda: jbatch(xj, qij, qtj).block_until_ready())
+    t_s = time_us(serial)
+    ratio = t_s / t_b if t_b else float("inf")
+    rows.append((f"kernel.decode_batch.batched[{batch}x{blocks}x64]", t_b,
+                 "one launch, per-row qtable gather"))
+    rows.append((f"kernel.decode_batch.serial_loop[{batch}x{blocks}x64]",
+                 t_s, f"{batch} per-image launches"))
+    rows.append(("kernel.decode_batch.speedup", ratio,
+                 f"batched_vs_serial_ratio={ratio:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    from benchmarks.common import emit
+    emit(run(quick="--full" not in sys.argv))

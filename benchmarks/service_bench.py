@@ -106,6 +106,60 @@ def open_loop(stream, workers: int, offered_rps: float) -> dict:
             "p99_s": snap["service"]["latency_s"]["p99"]}
 
 
+def batched_vs_serial(corpus, n_requests: int = 48, seed: int = 3,
+                      path_name: str = "jnp-batch") -> dict:
+    """The tentpole check applied to service traffic: group the request
+    stream by admission bucket and decode each bucket with ONE
+    ``decode_batch`` call, vs the same stream through the same path one
+    image at a time. Same entropy-decode work on both sides — the delta
+    is transform launch count, i.e. exactly what micro-batching buys once
+    batches decode as real batches."""
+    import time as _time
+
+    from repro.service.batcher import bucket_key
+
+    path = DECODE_PATHS[path_name]
+    stream = request_stream(corpus, n_requests, seed)
+    buckets: dict = {}
+    for data in stream:
+        buckets.setdefault(bucket_key(data), []).append(data)
+    for items in buckets.values():          # warm compile caches both ways
+        path.decode_batch(items)
+        for data in items:                  # every B=1 grid compiles too:
+            path.decode(data)               # the timed loops must be warm
+
+    t0 = _time.perf_counter()
+    n_batched = 0
+    for items in buckets.values():
+        n_batched += sum(1 for r in path.decode_batch(items)
+                         if not isinstance(r, BaseException))
+    t_batched = _time.perf_counter() - t0
+
+    t0 = _time.perf_counter()
+    for items in buckets.values():
+        for data in items:
+            path.decode(data)
+    t_serial = _time.perf_counter() - t0
+
+    assert n_batched == len(stream), (n_batched, len(stream))
+    return {"path": path_name, "n_requests": len(stream),
+            "n_buckets": len(buckets),
+            "batched_ips": len(stream) / t_batched,
+            "serial_ips": len(stream) / t_serial,
+            "ratio": t_serial / t_batched}
+
+
+def smoke():
+    """CI smoke: tiny corpus, batched-vs-serial ratio printed (ratio < 1
+    is possible on a noisy 2-vCPU runner; completeness is the assert)."""
+    corpus = build_corpus(10, seed=11)
+    r = batched_vs_serial(corpus, n_requests=24, seed=5)
+    return [("service.smoke.batched_vs_serial", 1e6 / r["batched_ips"],
+             f"batched={r['batched_ips']:.1f}ips "
+             f"serial={r['serial_ips']:.1f}ips ratio={r['ratio']:.2f} "
+             f"buckets={r['n_buckets']}")]
+
+
 def run(quick: bool = True):
     rows = []
     corpus = build_corpus(24 if quick else 96, seed=11)
@@ -137,6 +191,13 @@ def run(quick: bool = True):
                      f"delivered={r['delivered_ips']:.1f} "
                      f"shed={r['shed_frac']:.2f} p99={r['p99_s']*1e3:.1f}ms"))
 
+    bvs = batched_vs_serial(corpus, n_requests=48 if quick else 192, seed=3)
+    results["batched_vs_serial"] = bvs
+    rows.append(("service.batched_vs_serial", 1e6 / bvs["batched_ips"],
+                 f"batched={bvs['batched_ips']:.1f}ips "
+                 f"serial={bvs['serial_ips']:.1f}ips "
+                 f"ratio={bvs['ratio']:.2f} buckets={bvs['n_buckets']}"))
+
     best_closed = max(r["throughput_ips"]
                       for r in results["closed"].values())
     results["service_ge_serial"] = bool(best_closed >= base_ips)
@@ -147,4 +208,7 @@ def run(quick: bool = True):
 if __name__ == "__main__":
     from benchmarks.common import emit
     import sys
-    emit(run(quick="--full" not in sys.argv))
+    if "--smoke" in sys.argv:
+        emit(smoke())
+    else:
+        emit(run(quick="--full" not in sys.argv))

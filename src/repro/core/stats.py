@@ -13,6 +13,8 @@ DATALOADER_THRESHOLD = 0.05
 
 def mean_std(samples: Sequence[float]) -> Tuple[float, float]:
     a = np.asarray(samples, dtype=np.float64)
+    if a.size == 0:                 # defined value, not NaN + RuntimeWarning
+        return 0.0, 0.0
     return float(a.mean()), float(a.std(ddof=1)) if len(a) > 1 else 0.0
 
 
@@ -58,6 +60,8 @@ def rank_moves(single: Dict[str, float], loader: Dict[str, float]
                ) -> Dict[str, Tuple[int, int]]:
     """decoder -> (single-thread rank, loader rank); common keys only."""
     keys = [k for k in single if k in loader]
+    if not keys:
+        return {}
     sr = rankdata([single[k] for k in keys])
     lr = rankdata([loader[k] for k in keys])
     return {k: (int(round(sr[i])), int(round(lr[i])))
@@ -67,5 +71,7 @@ def rank_moves(single: Dict[str, float], loader: Dict[str, float]
 def largest_rank_move(single: Dict[str, float], loader: Dict[str, float]
                       ) -> Tuple[str, int, int]:
     moves = rank_moves(single, loader)
+    if not moves:                   # empty key intersection: no move
+        return ("", 0, 0)
     name = max(moves, key=lambda k: abs(moves[k][0] - moves[k][1]))
     return (name,) + moves[name]

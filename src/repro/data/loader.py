@@ -48,6 +48,9 @@ class LoaderConfig:
     straggler_factor: float = 4.0     # budget = factor * running median
     shard_index: int = 0              # per-host sharding
     shard_count: int = 1
+    decode_batch: int = 0             # thread mode: decode chunks of this
+                                      # many files via the path's
+                                      # decode_batch (0 = per-item)
 
 
 class SkipLedger:
@@ -114,12 +117,17 @@ class DataLoader:
 
     def __init__(self, files: Sequence[bytes], labels: Sequence[int],
                  decode_fn: Callable[[bytes], np.ndarray],
-                 cfg: LoaderConfig, *, path_name: Optional[str] = None):
+                 cfg: LoaderConfig, *, path_name: Optional[str] = None,
+                 batch_decode_fn: Optional[Callable] = None):
         self.files = files
         self.labels = np.asarray(labels, np.int32)
         self.decode_fn = decode_fn
         self.cfg = cfg
         self.path_name = path_name
+        self.batch_decode_fn = batch_decode_fn
+        if self.batch_decode_fn is None and path_name is not None:
+            from repro.jpeg.paths import get_path
+            self.batch_decode_fn = get_path(path_name).decode_batch
         self.ledger = SkipLedger()
         self.epoch = 0
         self.cursor = 0
@@ -233,6 +241,56 @@ class DataLoader:
         if len(self._latencies) > 512:
             del self._latencies[:256]
 
+    def _iter_decoded_thread_batches(self, order):
+        """Chunked thread decode: each worker takes a whole chunk through
+        ``decode_batch`` — on batched paths (jnp-batch/pallas-batch and
+        the fused jnp/pallas arms) the post-entropy transform runs as ONE
+        launch per same-structure group instead of per image. Emission
+        stays ordered and per-item; skips surface exactly as in the
+        per-item iterator."""
+        cfg = self.cfg
+        fn = self.batch_decode_fn
+        if fn is None:                  # no path: serial loop per chunk
+            def fn(datas):
+                out = []
+                for d in datas:
+                    try:
+                        out.append(self.decode_fn(d))
+                    except Exception as e:
+                        out.append(e)
+                return out
+        order = [int(i) for i in order]
+        size = cfg.decode_batch
+        chunks = [order[k:k + size] for k in range(0, len(order), size)]
+        ex = ThreadPoolExecutor(max_workers=cfg.num_workers)
+        inflight = max(1, cfg.num_workers) * max(1, cfg.prefetch)
+
+        def work(idxs):
+            t0 = time.monotonic()
+            return fn([self.files[i] for i in idxs]), t0
+
+        try:
+            pending: Dict[int, Any] = {}
+            pos = 0
+            emit = 0
+            while emit < len(chunks):
+                while pos < len(chunks) and len(pending) < inflight:
+                    pending[pos] = ex.submit(work, chunks[pos])
+                    pos += 1
+                results, t0 = pending.pop(emit).result()
+                self._note(t0)
+                for i, res in zip(chunks[emit], results):
+                    if isinstance(res, (UnsupportedJpeg, CorruptJpeg)):
+                        self.ledger.record(i, f"{type(res).__name__}: {res}")
+                        yield i, None
+                    elif isinstance(res, BaseException):
+                        raise res
+                    else:
+                        yield i, res
+                emit += 1
+        finally:
+            ex.shutdown(wait=False, cancel_futures=True)
+
     def _iter_decoded_procs(self, order):
         import multiprocessing as mp
         assert self.path_name is not None, \
@@ -261,7 +319,15 @@ class DataLoader:
         if cfg.num_workers == 0:
             decoded = self._iter_decoded_sync(order)
         elif cfg.mode == "thread":
-            decoded = self._iter_decoded_threads(order)
+            if cfg.decode_batch > 0:
+                if cfg.straggler_backup:
+                    raise ValueError(
+                        "decode_batch chunking and straggler_backup are "
+                        "mutually exclusive: chunked mode has no per-item "
+                        "backup dispatch")
+                decoded = self._iter_decoded_thread_batches(order)
+            else:
+                decoded = self._iter_decoded_threads(order)
         elif cfg.mode == "process":
             decoded = self._iter_decoded_procs(order)
         else:

@@ -35,10 +35,20 @@ class BitWriter:
             self.nbits -= 8
         self.acc &= (1 << self.nbits) - 1
 
-    def flush(self) -> bytes:
+    def align(self) -> None:
+        """Pad with 1s to the next byte boundary (stuffing still applies)."""
         if self.nbits:
             pad = 8 - self.nbits
-            self.write((1 << pad) - 1, pad)    # pad with 1s
+            self.write((1 << pad) - 1, pad)
+
+    def emit_marker(self, marker: int) -> None:
+        """Byte-align, then splice a raw (unstuffed) marker into the
+        stream — how RSTn markers land between restart intervals."""
+        self.align()
+        self.buf += bytes([0xFF, marker])
+
+    def flush(self) -> bytes:
+        self.align()                           # pad with 1s
         return bytes(self.buf)
 
 
@@ -118,6 +128,10 @@ def _sos(comps) -> bytes:
 _APP0 = _seg(0xE0, b"JFIF\x00\x01\x01\x00\x00\x01\x00\x01\x00\x00")
 
 
+def _dri(interval: int) -> bytes:
+    return _seg(0xDD, struct.pack(">H", interval))
+
+
 def _app14_adobe(transform: int) -> bytes:
     return _seg(0xEE, b"Adobe" + struct.pack(">HHHB", 100, 0, 0, transform))
 
@@ -158,9 +172,16 @@ def _encode_component_blocks(coefs: np.ndarray, dc_codes, ac_codes,
 
 
 def encode_jpeg(rgb: np.ndarray, quality: int = 85,
-                subsampling: str = "420") -> bytes:
-    """rgb: [H, W, 3] uint8 -> baseline JFIF bytes."""
+                subsampling: str = "420",
+                restart_interval: int = 0) -> bytes:
+    """rgb: [H, W, 3] uint8 -> baseline JFIF bytes.
+
+    ``restart_interval`` > 0 emits a DRI segment and an RSTn marker every
+    that many MCUs (byte-aligned, DC predictors reset) — the common real
+    ImageNet-file structure the restart-aware decoder is tested against.
+    """
     H, W = rgb.shape[:2]
+    ri = int(restart_interval)
     qy = T.quality_scale(T.STD_LUMA_Q, quality)
     qc = T.quality_scale(T.STD_CHROMA_Q, quality)
     ycc = rgb_to_ycbcr(rgb)
@@ -177,6 +198,7 @@ def encode_jpeg(rgb: np.ndarray, quality: int = 85,
                  for i in range(3)]
         mby, mbx = img.shape[0] // 8, img.shape[1] // 8
         preds = [0, 0, 0]
+        mcu_done = 0
         for my in range(mby):
             for mx in range(mbx):
                 bi = my * mbx + mx
@@ -184,6 +206,10 @@ def encode_jpeg(rgb: np.ndarray, quality: int = 85,
                     dc, ac = (dc_l, ac_l) if ci == 0 else (dc_c, ac_c)
                     preds[ci] = _encode_component_blocks(
                         comps[ci][bi:bi + 1], dc, ac, bw, preds[ci])
+                mcu_done += 1
+                if ri and mcu_done % ri == 0 and mcu_done < mby * mbx:
+                    bw.emit_marker(0xD0 + (mcu_done // ri - 1) % 8)
+                    preds = [0, 0, 0]
         sof = _sof0(H, W, [(1, 1, 1, 0), (2, 1, 1, 1), (3, 1, 1, 1)])
     elif subsampling == "420":
         img = _pad_to(ycc, 16, 16)
@@ -198,6 +224,7 @@ def encode_jpeg(rgb: np.ndarray, quality: int = 85,
         mby, mbx = img.shape[0] // 16, img.shape[1] // 16
         ybx = img.shape[1] // 8
         preds = [0, 0, 0]
+        mcu_done = 0
         for my in range(mby):
             for mx in range(mbx):
                 for dy in range(2):
@@ -210,6 +237,10 @@ def encode_jpeg(rgb: np.ndarray, quality: int = 85,
                     cbb[ci:ci + 1], dc_c, ac_c, bw, preds[1])
                 preds[2] = _encode_component_blocks(
                     crb[ci:ci + 1], dc_c, ac_c, bw, preds[2])
+                mcu_done += 1
+                if ri and mcu_done % ri == 0 and mcu_done < mby * mbx:
+                    bw.emit_marker(0xD0 + (mcu_done // ri - 1) % 8)
+                    preds = [0, 0, 0]
         sof = _sof0(H, W, [(1, 2, 2, 0), (2, 1, 1, 1), (3, 1, 1, 1)])
     else:
         raise ValueError(subsampling)
@@ -219,6 +250,8 @@ def encode_jpeg(rgb: np.ndarray, quality: int = 85,
     out += _dht(1, 0, T.AC_LUMA_BITS, T.AC_LUMA_VALS)
     out += _dht(0, 1, T.DC_CHROMA_BITS, T.DC_CHROMA_VALS)
     out += _dht(1, 1, T.AC_CHROMA_BITS, T.AC_CHROMA_VALS)
+    if ri:
+        out += _dri(ri)
     out += _sos([(1, 0, 0), (2, 1, 1), (3, 1, 1)])
     out += bw.flush() + b"\xff\xd9"
     return out

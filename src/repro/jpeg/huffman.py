@@ -19,7 +19,9 @@ class BitReader:
     __slots__ = ("data", "pos", "acc", "nbits", "n")
 
     def __init__(self, data: bytes):
-        # destuff 0xFF00 -> 0xFF (no restart markers in our streams)
+        # destuff 0xFF00 -> 0xFF; restart markers are split out *before*
+        # the reader sees the bytes (see _restart_segments), so the only
+        # 0xFF sequences left inside a segment are stuffed data bytes
         self.data = data.replace(b"\xff\x00", b"\xff")
         self.n = len(self.data)
         self.pos = 0
@@ -58,6 +60,30 @@ def _extend(bits: int, size: int) -> int:
     return bits
 
 
+def _restart_segments(scan: bytes) -> list:
+    """Split entropy-coded data at RSTn (0xFFD0..D7) marker boundaries.
+
+    The markers themselves are byte-aligned and carry no entropy bits, so
+    each returned segment is an independent bit stream: the decoder resets
+    DC predictors and bit alignment at every boundary (F.2.2.4). Stuffed
+    0xFF00 pairs are data, not markers, and are stepped over whole."""
+    segs = []
+    start = 0
+    i = 0
+    n = len(scan)
+    while i < n - 1:
+        if scan[i] == 0xFF:
+            nxt = scan[i + 1]
+            if 0xD0 <= nxt <= 0xD7:
+                segs.append(scan[start:i])
+                start = i + 2
+            i += 2               # marker or stuffed pair: step over both
+        else:
+            i += 1
+    segs.append(scan[start:])
+    return segs
+
+
 def decode_coefficients(spec: DecodeSpec) -> Dict[int, np.ndarray]:
     """-> {cid: int32 [by, bx, 8, 8] natural-order coefficient blocks}
     (by/bx = MCU-padded component block grid)."""
@@ -73,12 +99,25 @@ def decode_coefficients(spec: DecodeSpec) -> Dict[int, np.ndarray]:
         out[c.cid] = np.zeros((mcu_rows * c.v, mcu_cols * c.h, 64),
                               dtype=np.int32)
 
-    br = BitReader(spec.scan_data)
+    ri = spec.restart_interval
+    segments = _restart_segments(spec.scan_data) if ri else [spec.scan_data]
+    br = BitReader(segments[0])
+    seg_idx = 0
+    mcu_index = 0
     preds = {c.cid: 0 for c in spec.components}
     inv_zz = T.ZIGZAG  # zigzag index i -> natural position
 
     for my in range(mcu_rows):
         for mx in range(mcu_cols):
+            if ri and mcu_index and mcu_index % ri == 0:
+                # restart: byte-align on the next segment, DC preds to 0
+                seg_idx += 1
+                if seg_idx >= len(segments):
+                    raise CorruptJpeg("missing RST marker for interval")
+                br = BitReader(segments[seg_idx])
+                for c in spec.components:
+                    preds[c.cid] = 0
+            mcu_index += 1
             for c in spec.components:
                 dc_sym, dc_len = luts[(0, c.td)]
                 ac_sym, ac_len = luts[(1, c.ta)]

@@ -40,6 +40,7 @@ class DecodeSpec:
     progressive: bool = False
     adobe_transform: Optional[int] = None
     precision: int = 8
+    restart_interval: int = 0                   # DRI: MCUs per restart (0=off)
 
     @property
     def mcu_h(self) -> int:
@@ -50,7 +51,14 @@ class DecodeSpec:
         return 8 * max(c.h for c in self.components)
 
 
-def parse(data: bytes) -> DecodeSpec:
+def parse(data: bytes, headers_only: bool = False) -> DecodeSpec:
+    """Parse a JFIF stream into a DecodeSpec.
+
+    ``headers_only=True`` stops at SOS without scanning the entropy-coded
+    data (``scan_data`` is left empty). The O(file-size) entropy scan is
+    the bulk of parse time on large files; admission-time callers that
+    only need frame structure (``service.batcher.bucket_key``) use this.
+    """
     if data[:2] != b"\xff\xd8":
         raise CorruptJpeg("missing SOI")
     i = 2
@@ -61,18 +69,28 @@ def parse(data: bytes) -> DecodeSpec:
     progressive = False
     adobe = None
     precision = 8
+    restart_interval = 0
     scan = b""
     n = len(data)
     while i < n:
         if data[i] != 0xFF:
             raise CorruptJpeg(f"marker expected at {i}")
+        # tolerate 0xFF fill-byte padding before the marker code (B.1.1.2)
+        while i + 1 < n and data[i + 1] == 0xFF:
+            i += 1
+        if i + 1 >= n:
+            raise CorruptJpeg("truncated marker")
         marker = data[i + 1]
         i += 2
         if marker == 0xD9:       # EOI
             break
         if marker in (0x01,) or 0xD0 <= marker <= 0xD7:
             continue
+        if i + 2 > n:
+            raise CorruptJpeg("truncated segment length")
         (length,) = struct.unpack(">H", data[i:i + 2])
+        if length < 2 or i + length > n:
+            raise CorruptJpeg("segment length overruns file")
         payload = data[i + 2:i + length]
         i += length
         if marker == 0xDB:       # DQT
@@ -82,6 +100,8 @@ def parse(data: bytes) -> DecodeSpec:
                 j += 1
                 if pq:
                     raise UnsupportedJpeg("16-bit quant tables")
+                if j + 64 > len(payload):
+                    raise CorruptJpeg("truncated DQT table")
                 zz = np.frombuffer(payload[j:j + 64], dtype=np.uint8)
                 j += 64
                 nat = np.zeros(64, np.int32)
@@ -89,31 +109,49 @@ def parse(data: bytes) -> DecodeSpec:
                 qtables[tq] = nat.reshape(8, 8)
         elif marker in (0xC0, 0xC1, 0xC2):     # SOF0/1/2
             progressive = marker == 0xC2
-            precision = payload[0]
-            H, W = struct.unpack(">HH", payload[1:5])
-            nc = payload[5]
-            comps = []
-            for k in range(nc):
-                cid, hv, tq = payload[6 + 3 * k:9 + 3 * k]
-                comps.append(Component(cid, hv >> 4, hv & 0xF, tq))
+            try:
+                precision = payload[0]
+                H, W = struct.unpack(">HH", payload[1:5])
+                nc = payload[5]
+                comps = []
+                for k in range(nc):
+                    cid, hv, tq = payload[6 + 3 * k:9 + 3 * k]
+                    comps.append(Component(cid, hv >> 4, hv & 0xF, tq))
+            except (struct.error, IndexError, ValueError) as e:
+                raise CorruptJpeg(f"truncated SOF payload: {e}") from None
         elif marker == 0xC4:     # DHT
             j = 0
             while j < len(payload):
                 tc, th = payload[j] >> 4, payload[j] & 0xF
+                if j + 17 > len(payload):
+                    raise CorruptJpeg("truncated DHT bit counts")
                 bits = [0] + list(payload[j + 1:j + 17])
                 nv = sum(bits)
+                if j + 17 + nv > len(payload):
+                    raise CorruptJpeg("truncated DHT values")
                 vals = list(payload[j + 17:j + 17 + nv])
                 htables[(tc, th)] = (bits, vals)
                 j += 17 + nv
+        elif marker == 0xDD:     # DRI
+            if len(payload) < 2:
+                raise CorruptJpeg("truncated DRI payload")
+            (restart_interval,) = struct.unpack(">H", payload[:2])
         elif marker == 0xEE and payload[:5] == b"Adobe":
+            if len(payload) < 12:
+                raise CorruptJpeg("truncated Adobe APP14 payload")
             adobe = payload[11]
         elif marker == 0xDA:     # SOS
-            ns = payload[0]
-            for k in range(ns):
-                cid, tt = payload[1 + 2 * k:3 + 2 * k]
-                for c in comps:
-                    if c.cid == cid:
-                        c.td, c.ta = tt >> 4, tt & 0xF
+            try:
+                ns = payload[0]
+                for k in range(ns):
+                    cid, tt = payload[1 + 2 * k:3 + 2 * k]
+                    for c in comps:
+                        if c.cid == cid:
+                            c.td, c.ta = tt >> 4, tt & 0xF
+            except (IndexError, ValueError) as e:
+                raise CorruptJpeg(f"truncated SOS payload: {e}") from None
+            if headers_only:
+                break
             # entropy data runs until next non-RST marker
             j = i
             while j < n - 1:
@@ -123,11 +161,11 @@ def parse(data: bytes) -> DecodeSpec:
                 j += 1
             scan = data[i:j]
             i = j
-    if not comps or not scan:
+    if not comps or (not scan and not headers_only):
         raise CorruptJpeg("no frame/scan")
     return DecodeSpec(H, W, comps, qtables, htables, scan,
                       progressive=progressive, adobe_transform=adobe,
-                      precision=precision)
+                      precision=precision, restart_interval=restart_interval)
 
 
 def check_strict(spec: DecodeSpec) -> None:

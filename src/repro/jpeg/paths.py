@@ -1,5 +1,5 @@
-"""The fourteen decode paths (the paper's thirteen decoder analogues plus
-one beyond-paper optimization).
+"""The sixteen decode paths (the paper's thirteen decoder analogues plus
+one beyond-paper optimization plus the two true-batched serving paths).
 
 Every path is bytes -> RGB uint8 [H, W, 3] over the same codec substrate,
 differing in transform engine (numpy / jnp / Pallas), fusion/jit level,
@@ -16,12 +16,22 @@ paper's evaluation surface:
   jnp-jit         jnp       jit, separable IDCT                     no
   jnp-fused       jnp       jit, single fused transform             no
   jnp-batched     jnp       fused + reused compilation cache        no
+  jnp-batch       jnp       true batched: one fused launch / bucket no
   fft-idct        numpy     IDCT via FFT (scipy-free, skimage-ish)  no
   pallas-idct     pallas    IDCT kernel (interpret on CPU)          no
   pallas-fused    pallas    fused dequant+IDCT+color kernels        no
+  pallas-batch    pallas    batched kernel, per-row qtable gather   no
   strict-turbo    jnp       jnp-fused + strict policy               yes
   strict-fast     numpy     numpy-fast + strict policy              yes
   strict-pallas   pallas    pallas-idct + strict policy             yes
+
+Batched decode: every path answers ``decode_batch(list[bytes])`` (default:
+serial loop). Paths with a ``batch_fn`` — ``jnp-fused``/``jnp-batched``/
+``jnp-batch`` and ``pallas-fused``/``pallas-batch`` — decode a micro-batch
+with one fused transform launch per same-structure group: entropy decode
+stays serial on the host (bit-serial by nature), the post-entropy stages
+run as a real [B, ...] batch. Restart-interval (DRI/RSTn) JPEGs are
+handled by the shared entropy decoder, so every path inherits them.
 
 Process-pool loader eligibility: jax/pallas-backed paths are thread-loader
 only (jax runtime does not survive fork/spawn workers cheaply) — the
@@ -48,9 +58,27 @@ class DecodePath:
     process_eligible: bool = True     # usable in process-pool workers
     engine: str = "numpy"             # numpy | jnp | pallas
     description: str = ""
+    batch_fn: Optional[Callable[[List[bytes]], List]] = None
 
     def decode(self, data: bytes) -> np.ndarray:
         return self.fn(data)
+
+    def decode_batch(self, datas: List[bytes]) -> List:
+        """Decode a micro-batch; returns an index-aligned list whose
+        entries are RGB arrays or the per-item exception (UnsupportedJpeg
+        refusals and CorruptJpeg failures never poison batch-mates).
+
+        Paths without a ``batch_fn`` fall back to a serial loop, so the
+        service engine can treat every path uniformly."""
+        if self.batch_fn is not None:
+            return self.batch_fn(list(datas))
+        out: List = []
+        for d in datas:
+            try:
+                out.append(self.fn(d))
+            except Exception as e:
+                out.append(e)
+        return out
 
 
 def _entropy(data: bytes, strict: bool):
@@ -59,6 +87,31 @@ def _entropy(data: bytes, strict: bool):
         P.check_strict(spec)
     coef = huffman.decode_coefficients(spec)
     return spec, coef
+
+
+def _entropy_batch(datas: List[bytes], strict: bool) -> List:
+    """Host-side serial entropy decode; per-item exceptions captured."""
+    items: List = []
+    for d in datas:
+        try:
+            items.append(_entropy(d, strict))
+        except Exception as e:
+            items.append(e)
+    return items
+
+
+def _structure_groups(items: List) -> Dict[tuple, List[int]]:
+    """Index groups sharing component count + sampling structure (the
+    invariants a stacked [B, ...] transform needs)."""
+    groups: Dict[tuple, List[int]] = {}
+    for i, it in enumerate(items):
+        if isinstance(it, BaseException):
+            continue
+        spec = it[0]
+        key = (len(spec.components),
+               tuple((c.h, c.v) for c in spec.components))
+        groups.setdefault(key, []).append(i)
+    return groups
 
 
 # ------------------------------------------------------------ numpy family
@@ -139,6 +192,33 @@ def _jnp_fused(data: bytes, strict: bool = False) -> np.ndarray:
     return pipeline.transform_jnp(spec, coef, jit=True, separable=False)
 
 
+def _jnp_decode_batch(datas: List[bytes], strict: bool = False) -> List:
+    """True batched decode: serial host entropy, then ONE fused jitted
+    transform per same-structure group (see pipeline.transform_batch)."""
+    items = _entropy_batch(datas, strict)
+    out = list(items)                  # exceptions stay in place
+    for idxs in _structure_groups(items).values():
+        specs = [items[i][0] for i in idxs]
+        coefs = [items[i][1] for i in idxs]
+        try:
+            imgs = pipeline.transform_batch(specs, coefs)
+        except Exception as e:         # a bad group fails only its members
+            imgs = [e] * len(idxs)
+        for i, img in zip(idxs, imgs):
+            out[i] = img
+    return out
+
+
+def _one_of_batch(batch_fn) -> Callable[[bytes], np.ndarray]:
+    """Single-image front for a batched implementation (B=1 batch)."""
+    def fn(data: bytes) -> np.ndarray:
+        res = batch_fn([data])[0]
+        if isinstance(res, BaseException):
+            raise res
+        return res
+    return fn
+
+
 # ------------------------------------------------------------ pallas family
 def _pallas_idct(data: bytes, strict: bool = False) -> np.ndarray:
     from repro.kernels import ops
@@ -192,6 +272,67 @@ def _pallas_fused(data: bytes) -> np.ndarray:
                                 spec.width)
 
 
+def _pallas_transform_group(specs, coefs) -> List[np.ndarray]:
+    """One batched-kernel launch for a whole same-structure group: every
+    block row of every (image, component) pair is concatenated into one
+    [sum(blocks), 64] array with a per-row quant-table index — the
+    per-row gather is what lets rows of different images (and different
+    quality levels) share a single launch."""
+    from repro.kernels import ops
+    rows, ridx, qtabs, spans = [], [], [], []
+    for spec, coef in zip(specs, coefs):
+        for c in spec.components:
+            grid = coef[c.cid]
+            by, bx = grid.shape[:2]
+            r = grid.reshape(-1, 64).astype(np.float32)
+            ridx.append(np.full(len(r), len(qtabs), np.int32))
+            qtabs.append(spec.qtables[c.tq].astype(np.float32).reshape(64))
+            spans.append((len(r), by, bx))
+            rows.append(r)
+    pix = np.asarray(ops.decode_batch(
+        np.concatenate(rows), np.concatenate(ridx), np.stack(qtabs)))
+    imgs, pos, si = [], 0, 0
+    for spec in specs:
+        hmax = max(c.h for c in spec.components)
+        vmax = max(c.v for c in spec.components)
+        planes = []
+        for c in spec.components:
+            nr, by, bx = spans[si]
+            si += 1
+            blocks = pix[pos:pos + nr].reshape(by, bx, 8, 8)
+            pos += nr
+            plane = pipeline.assemble_plane_np(blocks)
+            planes.append(pipeline.upsample_np(plane, hmax // c.h,
+                                               vmax // c.v))
+        hh = min(p.shape[0] for p in planes)
+        ww = min(p.shape[1] for p in planes)
+        planes = [p[:hh, :ww] for p in planes]
+        if len(planes) == 3:
+            rgb = np.asarray(ops.ycbcr2rgb(planes[0], planes[1], planes[2]))
+        elif len(planes) == 1:
+            rgb = np.repeat(planes[0][..., None], 3, axis=-1)
+        else:
+            rgb = pipeline.ycck_to_rgb_np(*planes)
+        imgs.append(pipeline.finalize_np(rgb.astype(np.float64),
+                                         spec.height, spec.width))
+    return imgs
+
+
+def _pallas_decode_batch(datas: List[bytes], strict: bool = False) -> List:
+    items = _entropy_batch(datas, strict)
+    out = list(items)
+    for idxs in _structure_groups(items).values():
+        specs = [items[i][0] for i in idxs]
+        coefs = [items[i][1] for i in idxs]
+        try:
+            imgs = _pallas_transform_group(specs, coefs)
+        except Exception as e:
+            imgs = [e] * len(idxs)
+        for i, img in zip(idxs, imgs):
+            out[i] = img
+    return out
+
+
 DECODE_PATHS: Dict[str, DecodePath] = {}
 
 
@@ -210,19 +351,26 @@ _register("jnp-basic", _jnp_basic, engine="jnp", process_eligible=False,
 _register("jnp-jit", _jnp_jit, engine="jnp", process_eligible=False,
           description="jit, separable IDCT")
 _register("jnp-fused", lambda d: _jnp_fused(d, False), engine="jnp",
-          process_eligible=False,
+          process_eligible=False, batch_fn=_jnp_decode_batch,
           description="jit, fused whole-image transform")
 _register("jnp-batched", lambda d: _jnp_fused(d, False), engine="jnp",
-          process_eligible=False,
+          process_eligible=False, batch_fn=_jnp_decode_batch,
           description="fused + warm compile cache (bucketed shapes)")
+_register("jnp-batch", _one_of_batch(_jnp_decode_batch), engine="jnp",
+          process_eligible=False, batch_fn=_jnp_decode_batch,
+          description="true batched: one fused launch per bucket")
 _register("fft-idct", _fft_idct, engine="numpy",
           description="IDCT via FFT (skimage-style)")
 _register("pallas-idct", lambda d: _pallas_idct(d, False), engine="pallas",
           process_eligible=False,
           description="Pallas IDCT kernel (interpret on CPU; MXU on TPU)")
 _register("pallas-fused", _pallas_fused, engine="pallas",
-          process_eligible=False,
+          process_eligible=False, batch_fn=_pallas_decode_batch,
           description="fused Pallas dequant+IDCT + color kernels")
+_register("pallas-batch", _one_of_batch(_pallas_decode_batch),
+          engine="pallas", process_eligible=False,
+          batch_fn=_pallas_decode_batch,
+          description="batched Pallas kernel, per-row qtable gather")
 _register("strict-turbo", lambda d: _jnp_fused(d, True), engine="jnp",
           strict=True, process_eligible=False,
           description="jnp-fused + strict JPEG-mode policy")

@@ -7,7 +7,7 @@ tiling. All decode paths share these building blocks.
 from __future__ import annotations
 
 from functools import lru_cache, partial
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -184,6 +184,115 @@ def _transform_jit(coefs, qtables, *, n_comp, factors, h, w, separable):
     else:
         rgb = ycck_to_rgb_jnp(*planes)
     return finalize_jnp(rgb, h, w)
+
+
+# -------------------------------------------------- batched transforms
+# Observability hook: incremented once per fused batched-transform launch.
+# The service test asserts a full micro-batch costs ONE launch, not B.
+TRANSFORM_BATCH_CALLS = 0
+
+
+def assemble_plane_batch_jnp(blocks):
+    """[B, by, bx, 8, 8] -> [B, by*8, bx*8]."""
+    b, by, bx = blocks.shape[:3]
+    return blocks.transpose(0, 1, 3, 2, 4).reshape(b, by * 8, bx * 8)
+
+
+def upsample_batch_jnp(plane, fh: int, fv: int):
+    if fh == 1 and fv == 1:
+        return plane
+    return jnp.repeat(jnp.repeat(plane, fv, axis=1), fh, axis=2)
+
+
+@partial(jax.jit, static_argnames=("n_comp", "factors", "separable"))
+def _transform_batch_jit(coefs, qtables, *, n_comp, factors, separable):
+    """One fused launch for a whole micro-batch.
+
+    coefs[i]: [B, by_i, bx_i, 8, 8] f32 (zero-padded to the bucket grid);
+    qtables[i]: [B, 8, 8] per-image quant tables. Returns the *uncropped*
+    [B, Hpad, Wpad, 3] u8 batch — per-image crop happens host-side so the
+    compile-cache key is the bucket grid, not each member's pixel dims.
+    """
+    planes = []
+    for i in range(n_comp):
+        deq = coefs[i] * qtables[i][:, None, None]
+        b, by, bx = deq.shape[:3]
+        if separable:
+            c = jnp.asarray(T.dct_matrix().astype(np.float32))
+            blocks = jnp.einsum("ik,...kl,jl->...ij", c.T, deq, c.T)
+        else:
+            m = jnp.asarray(_IDCT64)
+            blocks = (deq.reshape(-1, 64) @ m.T).reshape(b, by, bx, 8, 8)
+        plane = assemble_plane_batch_jnp(blocks) + 128.0
+        fh, fv = factors[i]
+        planes.append(upsample_batch_jnp(plane, fh, fv))
+    hh = min(p.shape[1] for p in planes)
+    ww = min(p.shape[2] for p in planes)
+    planes = [p[:, :hh, :ww] for p in planes]
+    if n_comp == 1:
+        rgb = jnp.repeat(planes[0][..., None], 3, axis=-1)
+    elif n_comp == 3:
+        rgb = ycbcr_to_rgb_jnp(*planes)
+    else:
+        rgb = ycck_to_rgb_jnp(*planes)
+    return jnp.clip(jnp.round(rgb), 0, 255).astype(jnp.uint8)
+
+
+def batch_layout(specs: Sequence[DecodeSpec],
+                 coefs: Sequence[Dict[int, np.ndarray]]):
+    """Stack per-image coefficient grids into bucket-padded batch arrays.
+
+    All specs must share component count and sampling structure (the
+    bucket invariants). Grids inside a bucket may differ by up to the
+    bucket granularity; smaller members are zero-padded — zero blocks
+    IDCT to flat gray that the per-image crop discards.
+
+    -> (stacked [B, by, bx, 8, 8] f32 per component,
+        stacked [B, 8, 8] f32 qtables per component)
+    """
+    base = specs[0]
+    n_comp = len(base.components)
+    for s in specs[1:]:
+        if len(s.components) != n_comp or \
+                [(c.h, c.v) for c in s.components] != \
+                [(c.h, c.v) for c in base.components]:
+            raise ValueError("batch members must share sampling structure")
+    stacked, qstacked = [], []
+    for k in range(n_comp):
+        grids = [coefs[b][specs[b].components[k].cid] for b in range(len(specs))]
+        by = max(g.shape[0] for g in grids)
+        bx = max(g.shape[1] for g in grids)
+        out = np.zeros((len(specs), by, bx, 8, 8), np.float32)
+        for b, g in enumerate(grids):
+            out[b, :g.shape[0], :g.shape[1]] = g
+        stacked.append(out)
+        qstacked.append(np.stack(
+            [s.qtables[s.components[k].tq].astype(np.float32)
+             for s in specs]))
+    return stacked, qstacked
+
+
+def transform_batch(specs: Sequence[DecodeSpec],
+                    coefs: Sequence[Dict[int, np.ndarray]],
+                    separable: bool = False) -> List[np.ndarray]:
+    """Decode a same-bucket batch with a single fused jitted transform.
+
+    The per-image results are byte-identical to ``transform_jnp`` on each
+    member: every stage is pointwise per image (the IDCT GEMM reduces
+    over the fixed 64-wide axis), so batching only changes launch count.
+    """
+    global TRANSFORM_BATCH_CALLS
+    stacked, qstacked = batch_layout(specs, coefs)
+    hmax = max(c.h for c in specs[0].components)
+    vmax = max(c.v for c in specs[0].components)
+    factors = tuple((hmax // c.h, vmax // c.v) for c in specs[0].components)
+    TRANSFORM_BATCH_CALLS += 1
+    out = _transform_batch_jit(
+        tuple(jnp.asarray(s) for s in stacked),
+        tuple(jnp.asarray(q) for q in qstacked),
+        n_comp=len(stacked), factors=factors, separable=separable)
+    out = np.asarray(out)
+    return [out[b, :s.height, :s.width] for b, s in enumerate(specs)]
 
 
 def transform_jnp(spec: DecodeSpec, coef: Dict[int, np.ndarray],

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.jpeg import tables as T
+from repro.kernels.decode_batch import TILE_N as DB_TILE, decode_batch_pallas
 from repro.kernels.dequant_idct import TILE_N as DQ_TILE, dequant_idct_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.idct8x8 import TILE_N, idct8x8_pallas
@@ -46,6 +47,22 @@ def dequant_idct(x, q) -> jax.Array:
     q = jnp.asarray(q, jnp.float32).reshape(1, 64)
     xp, n = _pad_rows(x, DQ_TILE)
     out = dequant_idct_pallas(xp, q, _IDCT64, interpret=_interpret())
+    return out[:n]
+
+
+def decode_batch(x, qidx, qtables) -> jax.Array:
+    """Batched fused dequant+IDCT: [N, 64] rows + [N] per-row table index
+    + [T, 64] quant tables -> [N, 64] clamped pixel rows (one launch for a
+    whole micro-batch; rows from different images interleave freely)."""
+    x = jnp.asarray(x, jnp.float32)
+    qidx = jnp.asarray(qidx, jnp.int32).reshape(-1, 1)
+    qtables = jnp.asarray(qtables, jnp.float32)
+    if qtables.ndim != 2 or qtables.shape[1] != 64:
+        qtables = qtables.reshape(-1, 64)
+    xp, n = _pad_rows(x, DB_TILE)
+    qip, _ = _pad_rows(qidx, DB_TILE)          # pad rows index table 0
+    out = decode_batch_pallas(xp, qip, qtables, _IDCT64,
+                              interpret=_interpret())
     return out[:n]
 
 

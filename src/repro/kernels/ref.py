@@ -21,6 +21,12 @@ def dequant_idct(x: jax.Array, q: jax.Array) -> jax.Array:
     return jnp.clip(pix, 0.0, 255.0)
 
 
+def decode_batch(x: jax.Array, qidx: jax.Array, qtab: jax.Array) -> jax.Array:
+    """x: [N, 64] raw rows; qidx: [N] i32 table index; qtab: [T, 64]."""
+    pix = (x * qtab[qidx]) @ jnp.asarray(IDCT64).T + 128.0
+    return jnp.clip(pix, 0.0, 255.0)
+
+
 def ycbcr2rgb(y: jax.Array, cb: jax.Array, cr: jax.Array):
     r = y + 1.402 * (cr - 128.0)
     g = y - 0.344136 * (cb - 128.0) - 0.714136 * (cr - 128.0)

@@ -35,12 +35,14 @@ def _ceil_to(x: int, g: int) -> int:
 def bucket_key(data: bytes, granularity: int = 4) -> BucketKey:
     """Bucket identity of one JPEG: padded MCU grid + sampling structure.
 
-    Parses headers only as far as the decode paths themselves would; the
+    Parses *headers only* (``headers_only=True`` stops at SOS): admission
+    runs on the batcher thread, and the O(file-size) entropy-stream scan
+    it would otherwise pay per request belongs to the decode workers. The
     MCU grid (not pixel dims) is what determines coefficient-array shapes
     and therefore compile-cache identity. Grid dims are rounded up to
     ``granularity`` MCUs so near-identical resolutions share a bucket.
     """
-    spec = P.parse(data)
+    spec = P.parse(data, headers_only=True)
     mcu_rows = -(-spec.height // spec.mcu_h)
     mcu_cols = -(-spec.width // spec.mcu_w)
     sampling = tuple((c.h, c.v) for c in spec.components)

@@ -12,13 +12,16 @@ explicit shedding at admission — never as unbounded memory or deadlock):
   decode result cache is consulted first (hits resolve synchronously),
   then the admission controller either reserves an in-flight slot or
   raises ``ServiceOverloaded``.
-* The batcher thread groups requests by padded-MCU-grid bucket (warm
-  compile caches for jitted paths) and flushes on fill or deadline.
-* Each worker serves one batch at a time through the path chosen by the
-  bandit router, feeds measured throughput back to the router, and
-  retries strict-path ``UnsupportedJpeg`` refusals on the router's
-  non-strict fallback — so the skip ledger becomes a routing signal and
-  clients still get pixels for rare JPEG modes.
+* The batcher thread groups requests by padded-MCU-grid bucket (admission
+  parses headers only — the entropy scan belongs to decode workers) and
+  flushes on fill or deadline.
+* Each worker serves a micro-batch with ONE ``decode_batch`` call on the
+  router-picked path — batched paths run the post-entropy transform as a
+  real ``[B, ...]`` launch, others loop serially — feeds whole-batch
+  throughput back to the router, and retries per-item strict-path
+  ``UnsupportedJpeg`` refusals on the router's non-strict fallback — so
+  the skip ledger becomes a routing signal and clients still get pixels
+  for rare JPEG modes.
 * ``num_workers=0`` decodes inline in the caller thread (the service
   analogue of the loader's ``num_workers=0`` protocol arm), which is what
   ``benchmarks/service_bench.py`` compares against.
@@ -222,25 +225,39 @@ class DecodeService:
                 self._fail(req, ServiceShutdown("aborted"))
             return
         path = self.router.pick()
+        # ONE decode_batch call per micro-batch: same-bucket requests run
+        # the post-entropy transform as a real [B, ...] batch on paths
+        # that support it (serial-loop fallback otherwise). Per-item
+        # refusals/corruption come back in-place, so batch-mates are
+        # unaffected and strict refusals still reroute individually.
+        t0 = time.perf_counter()
+        try:
+            results = path.decode_batch([req.data for req in batch.items])
+            if len(results) != len(batch.items):
+                raise RuntimeError(
+                    f"{path.name}.decode_batch returned {len(results)} "
+                    f"results for {len(batch.items)} items")
+        except Exception as e:
+            # batch-level failures fail the futures, never the worker
+            for req in batch.items:
+                self._fail(req, e)
+            return
+        served_s = time.perf_counter() - t0
         refused: List[_Request] = []
-        served_s = 0.0
         n_ok = 0
-        for req in batch.items:
-            t0 = time.perf_counter()
-            try:
-                img = path.decode(req.data)
-            except UnsupportedJpeg:
+        for req, res in zip(batch.items, results):
+            if isinstance(res, UnsupportedJpeg):
                 self.router.record_skip(path.name)
                 self.metrics.record_skip(path.name)
                 refused.append(req)
-                continue
-            except Exception as e:
-                self._fail(req, e)
-                continue
-            served_s += time.perf_counter() - t0
-            n_ok += 1
-            self._fulfil(req, img, path.name)
+            elif isinstance(res, BaseException):
+                self._fail(req, res)
+            else:
+                n_ok += 1
+                self._fulfil(req, res, path.name)
         if n_ok and served_s > 0:
+            # batch-level throughput accounting: the router learns from
+            # whole-batch wall time, which is what batching improves
             self.router.update(path.name, n_ok, served_s)
         for req in refused:
             self._serve_fallback(req, path)

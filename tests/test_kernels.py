@@ -41,6 +41,33 @@ def test_dequant_idct_matches_ref(n, qscale):
     assert out.min() >= 0.0 and out.max() <= 255.0
 
 
+@pytest.mark.parametrize("n", [64, 512, 777])
+@pytest.mark.parametrize("ntab", [1, 3, 24])
+def test_decode_batch_matches_ref(n, ntab):
+    """Batched kernel with per-row quant-table gather vs the jnp oracle
+    (covers non-tile-multiple row counts and 1..many tables)."""
+    rng = np.random.RandomState(n * 31 + ntab)
+    x = rng.randint(-200, 200, size=(n, 64)).astype(np.float32)
+    qt = np.clip(rng.randint(1, 99, size=(ntab, 64)), 1, 255).astype(
+        np.float32)
+    qi = rng.randint(0, ntab, size=n).astype(np.int32)
+    out = np.asarray(ops.decode_batch(x, qi, qt))
+    want = np.asarray(ref.decode_batch(jnp.asarray(x), jnp.asarray(qi),
+                                       jnp.asarray(qt)))
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-3)
+    assert out.min() >= 0.0 and out.max() <= 255.0
+
+
+def test_decode_batch_single_table_matches_dequant_idct():
+    """With one table the batched kernel degenerates to dequant_idct."""
+    rng = np.random.RandomState(9)
+    x = rng.randint(-200, 200, size=(640, 64)).astype(np.float32)
+    q = rng.randint(1, 64, size=64).astype(np.float32)
+    a = np.asarray(ops.decode_batch(x, np.zeros(640, np.int32), q[None]))
+    b = np.asarray(ops.dequant_idct(x, q))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-4)
+
+
 @pytest.mark.parametrize("hw", [(8, 128), (64, 64), (100, 130), (17, 23)])
 def test_ycbcr2rgb_matches_ref(hw):
     h, w = hw

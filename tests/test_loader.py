@@ -51,6 +51,34 @@ def test_thread_mode_preserves_order(corpus):
     np.testing.assert_array_equal(b0, b2)
 
 
+def test_thread_loader_batched_decode_matches_serial(corpus):
+    """decode_batch chunks through the thread pool deliver the same
+    ordered stream (images and labels) as the per-item serial loader."""
+    batched_path = DECODE_PATHS["jnp-batch"]
+    serial = mkloader(corpus, path=batched_path)
+    chunked = mkloader(corpus, path=batched_path, num_workers=2,
+                       decode_batch=4)
+    for bs, bc in zip(serial, chunked):
+        np.testing.assert_array_equal(bs["image"], bc["image"])
+        np.testing.assert_array_equal(bs["label"], bc["label"])
+
+
+def test_thread_loader_batched_decode_skips_to_ledger(corpus):
+    """Strict refusals inside a chunk land in the skip ledger per item,
+    exactly as in per-item mode."""
+    dl = mkloader(corpus, path=STRICT, num_workers=2, decode_batch=4)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(corpus.files) - 1
+    assert dl.ledger.indices() == [corpus.rare_index]
+
+
+def test_batched_decode_rejects_straggler_backup(corpus):
+    dl = mkloader(corpus, num_workers=2, decode_batch=4,
+                  straggler_backup=True)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        next(iter(dl))
+
+
 def test_process_mode_rejects_jax_paths(corpus):
     dl = mkloader(corpus, path=DECODE_PATHS["jnp-fused"], num_workers=2,
                   mode="process")

@@ -19,6 +19,20 @@ def test_rankdata_ties():
     assert list(r) == [1.5, 1.5, 3.0]
 
 
+def test_mean_std_empty_is_defined():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # NaN mean warns; guard must not
+        assert stats.mean_std([]) == (0.0, 0.0)
+    assert stats.mean_std([3.0]) == (3.0, 0.0)
+
+
+def test_rank_moves_empty_intersection():
+    assert stats.rank_moves({"a": 1.0}, {"b": 2.0}) == {}
+    assert stats.largest_rank_move({"a": 1.0}, {"b": 2.0}) == ("", 0, 0)
+    assert stats.rank_moves({}, {}) == {}
+
+
 def test_practical_language():
     assert stats.comparison_language(110, 100, 0.05) == "faster"
     assert stats.comparison_language(104, 100, 0.05) == "tied"
