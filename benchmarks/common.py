@@ -1,16 +1,31 @@
-"""Shared benchmark plumbing: timing + artifact output."""
+"""Shared benchmark plumbing: timing, artifact output, and the shared
+sweep that all table/figure views derive from (one measurement pass per
+process instead of nine ad-hoc loops)."""
 from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                          "bench")
 
+_SWEEP_CACHE: Dict[str, object] = {}
+
+
+def sweep_records(quick: bool = True):
+    """Live RunRecords for the table views, measured once per process by
+    the bench harness (quick -> 'quick' profile, else 'full') and written
+    to artifacts/bench/ as a side effect."""
+    from repro.bench import run_sweep
+    profile = "quick" if quick else "full"
+    if profile not in _SWEEP_CACHE:
+        _SWEEP_CACHE[profile] = run_sweep(profile, out_dir=ARTIFACTS)
+    return _SWEEP_CACHE[profile].records
+
 
 def time_us(fn: Callable, *, repeats: int = 5, number: int = 1) -> float:
+    import time
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()

@@ -1,14 +1,12 @@
 """Paper Figure 3: the TensorFlow single-thread ARM penalty (recorded), and
 its framework analogue: heavyweight-engine decode paths (jax-backed) vs
 lean numpy paths in single-thread decode on this host (dispatch/runtime
-overhead is the mechanism behind both)."""
+overhead is the mechanism behind both). Live numbers come from the shared
+bench-harness sweep."""
 from __future__ import annotations
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, sweep_records
 from repro.core import paper_data as PD
-from repro.core.protocols import SingleThreadProtocol
-from repro.jpeg.corpus import build_corpus
-from repro.jpeg.paths import DECODE_PATHS
 
 
 def run(quick: bool = True):
@@ -20,12 +18,20 @@ def run(quick: bool = True):
                  f"tf_arm_vs_x86={arm / x86:.2f} (paper: ~3/5 of local "
                  f"winner on ARM)"))
 
-    corpus = build_corpus(24 if quick else 96, seed=44)
-    st = SingleThreadProtocol(corpus, repeats=2)
-    recs = st.run(["numpy-fast", "jnp-fused"])
-    thr = {r.decoder: r.throughput_mean for r in recs}
+    recs = sweep_records(quick)
+    thr = {r.decoder: r.throughput_mean for r in recs
+           if r.protocol == "single_thread" and r.ok}
+    missing = [d for d in ("jnp-fused", "numpy-fast") if d not in thr]
+    if missing:
+        reasons = {r.decoder: r.meta.get("reason", r.status)
+                   for r in recs if r.protocol == "single_thread"
+                   and r.decoder in missing}
+        raise RuntimeError(
+            f"fig3 needs single-thread cells {missing}: {reasons}")
     ratio = thr["jnp-fused"] / thr["numpy-fast"]
     rows.append(("fig3.live_engine_overhead", 1e6 / thr["jnp-fused"],
                  f"jnp_vs_numpy_single_thread={ratio:.2f}"))
-    save_json("fig3_live.json", {"thr": thr, "ratio": ratio})
+    save_json("fig3_live.json",
+              {"thr": {k: thr[k] for k in ("numpy-fast", "jnp-fused")},
+               "ratio": ratio})
     return rows

@@ -9,7 +9,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import Dict
 
 from benchmarks.common import save_json
 

@@ -1,50 +1,191 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV. --full widens corpora/worker sweeps (default is a quick pass sized
-# for this 1-vCPU container).
+"""Benchmark CLI — thin front-end over ``repro.bench``.
+
+Subcommands:
+
+  sweep    (default) run the scenario-matrix harness; emits validated
+           RunRecord JSON + derived reports into artifacts/bench/.
+           ``--smoke`` / ``--full`` pick the profile; ``--only`` narrows
+           to named scenarios (validated — typos are hard errors).
+  tables   regenerate the per-paper-table CSV views (table1..5, fig3,
+           kernels, roofline, service) — now derived from one shared
+           sweep instead of nine ad-hoc measurement loops.
+  compare  diff two record sets with noise-aware gates; exits nonzero on
+           a hard (>2x by default) regression unless --warn-only.
+  list     print every scenario name and whether each profile runs it.
+
+Arguments are parsed strictly: unknown flags error out instead of being
+silently swallowed (the old ``parse_known_args`` behavior hid typos).
+"""
 import argparse
 import sys
-import traceback
+
+SUBCOMMANDS = ("sweep", "tables", "compare", "list")
+TABLES = ("table1", "table2", "table3", "table4", "table5",
+          "fig3", "kernels", "roofline", "service")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None,
-                    help="comma-separated bench names")
-    args, _ = ap.parse_known_args()
-    quick = not args.full
+def _profile_from_flags(args) -> str:
+    if args.smoke and args.full:
+        raise SystemExit("--smoke and --full are mutually exclusive")
+    if args.smoke:
+        return "smoke"
+    if args.full:
+        return "full"
+    return args.profile
+
+
+def _add_profile_flags(ap) -> None:
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized profile (tiny corpus, strict budget)")
+    ap.add_argument("--full", action="store_true",
+                    help="full matrix: all 16 paths x {0,2,4,8} x modes")
+    ap.add_argument("--profile", default="quick",
+                    choices=("smoke", "quick", "full"))
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="benchmarks/run.py",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd")
+
+    sw = sub.add_parser("sweep", help="run the scenario-matrix harness")
+    _add_profile_flags(sw)
+    sw.add_argument("--only", default=None,
+                    help="comma-separated scenario names or family "
+                         "prefixes (e.g. 'single,loader/numpy-fast')")
+    sw.add_argument("--out", default=None,
+                    help="artifact directory (default artifacts/bench)")
+
+    tb = sub.add_parser("tables", help="regenerate paper-table CSV views")
+    tb.add_argument("--full", action="store_true")
+    tb.add_argument("--only", default=None,
+                    help=f"comma-separated table names from: "
+                         f"{', '.join(TABLES)}")
+
+    cp = sub.add_parser("compare", help="gate candidate records vs baseline")
+    cp.add_argument("baseline", help="baseline record-set JSON")
+    cp.add_argument("candidate", help="candidate record-set JSON")
+    cp.add_argument("--fail-ratio", type=float, default=2.0,
+                    help="hard-fail when throughput drops more than this "
+                         "factor (default 2.0)")
+    cp.add_argument("--warn-only", action="store_true",
+                    help="report failures but exit 0 (bootstrap mode "
+                         "while baselines stabilize)")
+
+    sub.add_parser("list", help="print the scenario registry")
+    return ap
+
+
+def cmd_sweep(args) -> int:
+    from repro.bench import BenchSelectionError, run_sweep
+    only = [t for t in (args.only or "").split(",") if t] or None
+    kw = {}
+    if args.out:
+        kw["out_dir"] = args.out
+    try:
+        res = run_sweep(_profile_from_flags(args), only=only, **kw)
+    except BenchSelectionError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    print("scenario,status,images_per_s,detail")
+    errors = 0
+    for r in res.records:
+        detail = r.meta.get("reason", "") or \
+            f"skips={r.skips} workers={r.workers} mode={r.mode or '-'}"
+        print(f"{r.scenario},{r.status},{r.throughput_mean:.1f},{detail}")
+        errors += r.status == "error"
+    print(f"# profile={res.profile} scenarios={len(res.records)} "
+          f"elapsed={res.elapsed_s:.1f}s artifacts={len(res.files)}",
+          file=sys.stderr)
+    if res.out_dir:
+        print(f"# records: {res.files[0]}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+def cmd_tables(args) -> int:
+    import traceback
 
     from benchmarks import (fig3_tf_penalty, kernels_bench, roofline,
                             service_bench, table1_guide, table2_protocol,
                             table3_workers, table4_tiers, table5_guide)
-    benches = [
-        ("table1", table1_guide),
-        ("table2", table2_protocol),
-        ("table3", table3_workers),
-        ("table4", table4_tiers),
-        ("table5", table5_guide),
-        ("fig3", fig3_tf_penalty),
-        ("kernels", kernels_bench),
-        ("roofline", roofline),
-        ("service", service_bench),
-    ]
-    only = set(args.only.split(",")) if args.only else None
+    benches = {
+        "table1": table1_guide, "table2": table2_protocol,
+        "table3": table3_workers, "table4": table4_tiers,
+        "table5": table5_guide, "fig3": fig3_tf_penalty,
+        "kernels": kernels_bench, "roofline": roofline,
+        "service": service_bench,
+    }
+    only = [t for t in (args.only or "").split(",") if t]
+    bad = sorted(set(only) - set(benches))
+    if bad:
+        print(f"error: unknown table(s) {', '.join(bad)}; valid names: "
+              f"{', '.join(benches)}", file=sys.stderr)
+        return 2
+    quick = not args.full
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in benches:
+    for name, mod in benches.items():
         if only and name not in only:
             continue
         try:
-            for row in mod.run(quick=quick):
-                n, us, derived = row
+            for n, us, derived in mod.run(quick=quick):
                 print(f"{n},{us:.1f},{derived}")
         except Exception as e:
             failures += 1
             print(f"{name}.ERROR,0.0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
-    if failures:
-        sys.exit(1)
+    return 1 if failures else 0
 
 
-if __name__ == '__main__':
-    main()
+def cmd_compare(args) -> int:
+    from repro.bench import compare_paths
+    from repro.core.report import compare_report
+    from repro.core.schema import SchemaError
+    try:
+        res = compare_paths(args.baseline, args.candidate,
+                            fail_ratio=args.fail_ratio)
+    except (OSError, SchemaError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    gated_verdicts = ("fail", "warn", "improved", "ok")
+    gated = [e for e in res.entries if e.verdict in gated_verdicts]
+    print(compare_report(gated))
+    other = [e for e in res.entries if e.verdict not in gated_verdicts]
+    for e in other:
+        print(f"# {e.scenario}: {e.verdict} ({e.detail})")
+    print(res.summary_line())
+    code = res.exit_code(warn_only=args.warn_only)
+    if res.n_fail and args.warn_only:
+        print(f"warn-only: {res.n_fail} failure(s) demoted to warnings")
+    return code
+
+
+def cmd_list(_args) -> int:
+    from repro.bench import PROFILES, build_registry
+    profs = list(PROFILES.values())
+    print("scenario," + ",".join(p.name for p in profs))
+    for s in build_registry():
+        cells = ",".join("run" if p.wants(s)[0] else "skip" for p in profs)
+        print(f"{s.name},{cells}")
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # default subcommand: bare flags mean "sweep" (CI invokes
+    # `run.py --smoke`), but never swallow a typo'd first positional.
+    if argv and not argv[0].startswith("-") and argv[0] not in SUBCOMMANDS:
+        print(f"error: unknown command {argv[0]!r}; "
+              f"valid: {', '.join(SUBCOMMANDS)}", file=sys.stderr)
+        return 2
+    if not argv or argv[0].startswith("-"):
+        if "-h" not in argv and "--help" not in argv:
+            argv.insert(0, "sweep")
+    args = build_parser().parse_args(argv)
+    handler = {"sweep": cmd_sweep, "tables": cmd_tables,
+               "compare": cmd_compare, "list": cmd_list}[args.cmd]
+    return handler(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,23 +3,16 @@
 Two parts:
   recorded — validate the paper's own derived claims from its published
              numbers (leader disagreement count, single-leader gaps).
-  live     — run both protocols on this host's corpus across decode paths
-             and compute the same diagnostics (leaders, Spearman rho,
-             largest rank move).
+  live     — the same diagnostics (leaders, Spearman rho, largest rank
+             move) computed from the shared bench-harness sweep; this
+             view measures nothing itself.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import save_json, time_us
-from repro.core import decision, paper_data as PD, stats
-from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
-from repro.core.schema import save_records
-from repro.jpeg.corpus import build_corpus
-from repro.jpeg.paths import DECODE_PATHS
-
-LIVE_PATHS = ["numpy-ref", "numpy-fast", "numpy-int", "fft-idct",
-              "jnp-fused", "jnp-jit", "strict-fast", "strict-turbo"]
+from benchmarks.common import save_json, sweep_records
+from repro.core import decision, paper_data as PD
 
 
 def run(quick: bool = True):
@@ -40,23 +33,18 @@ def run(quick: bool = True):
                  f"disagree={n_disagree}/5 gaps_validated="
                  f"{sum(gaps_ok)}/{len(gaps_ok)}"))
 
-    # ---- live -------------------------------------------------------
-    n = 48 if quick else 200
-    corpus = build_corpus(n, seed=42)
-    names = LIVE_PATHS if quick else list(DECODE_PATHS)
-    workers = (0, 2) if quick else (0, 2, 4, 8)
-    st = SingleThreadProtocol(corpus, repeats=2 if quick else 3)
-    recs = st.run(names)
-    lp = LoaderProtocol(corpus, repeats=1 if quick else 2)
-    for nm in names:
-        for w in workers:
-            recs.append(lp.run_path(DECODE_PATHS[nm], w))
-    save_records(recs, "artifacts/bench/live_records_table2.json")
-
+    # ---- live (derived from the shared sweep) -----------------------
+    recs = sweep_records(quick)
     rec = decision.recommend(recs)
-    d = rec["protocol_disagreement"]["live-host"]
+    d = rec["protocol_disagreement"].get("live-host")
+    if d is None:
+        bad = sorted({(r.protocol, r.meta.get("reason", r.status))
+                      for r in recs if not r.ok})[:4]
+        raise RuntimeError(
+            "table2 needs overlapping ok single-thread and loader "
+            f"records on live-host; non-ok cells include: {bad}")
     single = {r.decoder: r.throughput_mean for r in recs
-              if r.protocol == "single_thread"}
+              if r.protocol == "single_thread" and r.ok}
     st_thr = np.mean(list(single.values()))
     rows.append(("table2.live_single_thread", 1e6 / st_thr,
                  f"leader={d['single_leader']}"))

@@ -2,23 +2,16 @@
 
 recorded — consistency checks on the published counts (11 decoders split
            between w=4 and w=8 peaks; Zen 4 the only w=4-majority platform).
-live     — worker sweep {0,2,4,8} on this host for a decoder subset; report
-           per-decoder peak worker count and peak/w0 speedup. (This host
-           has 1 vCPU, so speedups ~<=1 are expected and documented — the
-           point is the protocol, which transfers unchanged to 16-vCPU
-           nodes.)
+live     — per-decoder peak worker count and peak/w0 speedup, read from
+           the shared bench-harness sweep's thread-mode loader records.
+           (This host has few vCPUs, so speedups ~<=1 are expected and
+           documented — the point is the protocol, which transfers
+           unchanged to 16-vCPU nodes.)
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import save_json
+from benchmarks.common import save_json, sweep_records
 from repro.core import paper_data as PD
-from repro.core.protocols import LoaderProtocol
-from repro.jpeg.corpus import build_corpus
-from repro.jpeg.paths import DECODE_PATHS
-
-LIVE_PATHS = ["numpy-fast", "numpy-int", "fft-idct"]
 
 
 def run(quick: bool = True):
@@ -29,17 +22,17 @@ def run(quick: bool = True):
     rows.append(("table3.recorded", 0.0,
                  f"counts_ok={ok} w4_majority={w4major}"))
 
-    corpus = build_corpus(32 if quick else 128, seed=43)
-    lp = LoaderProtocol(corpus, repeats=1)
     sweep = {}
-    workers = (0, 2, 4) if quick else (0, 2, 4, 8)
-    for nm in LIVE_PATHS:
-        per = {}
-        for w in workers:
-            r = lp.run_path(DECODE_PATHS[nm], w)
-            per[w] = r.throughput_mean
+    per_path: dict = {}
+    for r in sweep_records(quick):
+        if r.protocol == "dataloader" and r.ok and r.mode == "thread":
+            per_path.setdefault(r.decoder, {})[r.workers] = \
+                r.throughput_mean
+    for nm, per in sorted(per_path.items()):
+        if len(per) < 2:
+            continue                      # no sweep to rank on this path
         peak_w = max(per, key=per.get)
-        speedup = per[peak_w] / per[0] if per[0] else 0.0
+        speedup = per[peak_w] / per[0] if per.get(0) else 0.0
         sweep[nm] = {"per_worker": per, "peak_w": peak_w,
                      "speedup": speedup}
         rows.append((f"table3.live.{nm}", 1e6 / max(per.values()),

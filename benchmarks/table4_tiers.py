@@ -3,20 +3,13 @@
 recorded — rebuild the paper's tier membership from Table 5 peaks + the
            skip policy and check it matches Table 4's decoders; validate
            normalized values against Table 4 bounds.
-live     — compute the tier from live records via decision.robust_tier.
+live     — compute the tier from the shared bench-harness sweep via
+           decision.robust_tier.
 """
 from __future__ import annotations
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, sweep_records
 from repro.core import decision, paper_data as PD
-from repro.core.schema import RunRecord
-
-
-def _rec(plat, dec, thr, w, skips=()):
-    return RunRecord(platform=plat, decoder=dec, protocol="dataloader",
-                     workers=w, mode="thread", throughput_mean=float(thr),
-                     throughput_std=0.0, samples=[float(thr)],
-                     num_images=50000, skip_indices=list(skips))
 
 
 def run(quick: bool = True):
@@ -40,15 +33,10 @@ def run(quick: bool = True):
                  f"bounds_ok={t4ok} table5_cross_ok="
                  f"{sum(cross_ok)}/{len(cross_ok)} floor=90%"))
 
-    # live tier from the table2 live records if available
-    try:
-        from repro.core.schema import load_records
-        recs = load_records("artifacts/bench/live_records_table2.json")
-        tier = decision.robust_tier(recs, floor=0.5)
-        rows.append(("table4.live_tier", 0.0,
-                     "tier=" + "/".join(t.decoder for t in tier[:4])))
-        save_json("table4_live.json",
-                  [t.__dict__ for t in tier])
-    except FileNotFoundError:
-        rows.append(("table4.live_tier", 0.0, "run table2 first"))
+    # live tier from the shared sweep (loose floor: a few-vCPU host
+    # compresses loader spreads, so 90% would often be an empty tier)
+    tier = decision.robust_tier(sweep_records(quick), floor=0.5)
+    rows.append(("table4.live_tier", 0.0,
+                 "tier=" + "/".join(t.decoder for t in tier[:4])))
+    save_json("table4_live.json", [t.__dict__ for t in tier])
     return rows

@@ -3,11 +3,11 @@
 recorded — regenerate the per-platform leaders from the recorded matrix via
            the decision engine and verify against the published first
            choices.
-live     — the same table for this host.
+live     — the same table for this host, from the shared sweep.
 """
 from __future__ import annotations
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, sweep_records
 from repro.core import decision, paper_data as PD
 from repro.core.schema import RunRecord
 
@@ -30,17 +30,13 @@ def run(quick: bool = True):
     rows.append(("table5.recorded", 0.0,
                  f"first_choice_match={match}/5"))
 
-    try:
-        from repro.core.schema import load_records
-        live = load_records("artifacts/bench/live_records_table2.json")
-        lp = decision.peak_loader_throughput(live).get("live-host", {})
-        zs = decision.zero_skip(lp)
-        top = sorted(zs.values(), key=lambda r: -r.throughput_mean)[:3]
-        rows.append(("table5.live", 0.0, " / ".join(
-            f"{r.decoder}:{r.throughput_mean:.0f}img/s(w={r.workers})"
-            for r in top)))
-        save_json("table5_live.json",
-                  [(r.decoder, r.throughput_mean, r.workers) for r in top])
-    except FileNotFoundError:
-        rows.append(("table5.live", 0.0, "run table2 first"))
+    live = sweep_records(quick)
+    lp = decision.peak_loader_throughput(live).get("live-host", {})
+    zs = decision.zero_skip(lp)
+    top = sorted(zs.values(), key=lambda r: -r.throughput_mean)[:3]
+    rows.append(("table5.live", 0.0, " / ".join(
+        f"{r.decoder}:{r.throughput_mean:.0f}img/s(w={r.workers})"
+        for r in top)))
+    save_json("table5_live.json",
+              [(r.decoder, r.throughput_mean, r.workers) for r in top])
     return rows

@@ -4,7 +4,6 @@ protocols, and get an operational recommendation — the paper's workflow in
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core import decision
 from repro.core.protocols import LoaderProtocol, SingleThreadProtocol

@@ -1,0 +1,21 @@
+"""Unified benchmark subsystem (see DESIGN.md §bench).
+
+The measurement backbone: a scenario registry spanning the paper's whole
+protocol matrix, a sweep harness that emits schema-validated RunRecord
+JSON plus derived decision reports, and a noise-aware record-set compare
+gate for CI. `benchmarks/*.py` are thin views over this package.
+"""
+from repro.bench.compare import (CompareEntry, CompareResult,
+                                 compare_paths, compare_records)
+from repro.bench.harness import (DEFAULT_OUT, SweepResult, render_report,
+                                 run_sweep)
+from repro.bench.registry import (PROFILES, BenchSelectionError, Profile,
+                                  Scenario, build_registry, scenario_names,
+                                  select_scenarios)
+
+__all__ = [
+    "CompareEntry", "CompareResult", "compare_paths", "compare_records",
+    "DEFAULT_OUT", "SweepResult", "render_report", "run_sweep",
+    "PROFILES", "BenchSelectionError", "Profile", "Scenario",
+    "build_registry", "scenario_names", "select_scenarios",
+]

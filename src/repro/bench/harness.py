@@ -1,0 +1,310 @@
+"""Scenario-sweep harness: one entry point for every perf number.
+
+Runs the selected slice of the scenario registry over a shared synthetic
+corpus, stamps each emitted RunRecord with its scenario name and the
+host fingerprint, validates everything against ``core.schema``, and
+writes:
+
+  artifacts/bench/records_<profile>.json     — the full validated set
+  artifacts/bench/scenarios/<name>.json      — one payload per scenario
+  artifacts/bench/report_<profile>.md        — derived views (status,
+      single-thread table, loader table, zero-skip tier, rank flips)
+  artifacts/bench/summary_<profile>.json     — decision.recommend output
+      + status counts + wall-clock
+
+Downstream consumers (paper-table views, the CI regression gate, future
+perf PRs) read records — never re-measure — so results stay comparable
+across commits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.bench import service_load
+from repro.bench.registry import (KIND_BATCHED, KIND_LOADER,
+                                  KIND_SERVICE_CLOSED, KIND_SERVICE_OPEN,
+                                  KIND_SINGLE, PROFILES, Profile, Scenario,
+                                  select_scenarios)
+from repro.common.hw import host_fingerprint
+from repro.core import decision, report
+from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
+from repro.core.schema import RunRecord, save_records, validate_record
+from repro.jpeg.corpus import build_corpus
+from repro.jpeg.paths import DECODE_PATHS
+
+DEFAULT_OUT = os.path.join("artifacts", "bench")
+
+
+@dataclasses.dataclass
+class SweepResult:
+    profile: str
+    records: List[RunRecord]
+    elapsed_s: float
+    out_dir: Optional[str]
+    files: List[str]
+
+    def ok_records(self) -> List[RunRecord]:
+        return [r for r in self.records if r.ok]
+
+
+def _skip_record(s: Scenario, reason: str, platform: str) -> RunRecord:
+    return RunRecord(
+        platform=platform, decoder=s.path or "service",
+        protocol=s.kind, workers=s.workers, mode=s.mode,
+        throughput_mean=0.0, throughput_std=0.0, samples=[],
+        meta={"status": "skipped", "reason": reason, "scenario": s.name})
+
+
+def _error_record(s: Scenario, err: BaseException,
+                  platform: str) -> RunRecord:
+    return RunRecord(
+        platform=platform, decoder=s.path or "service",
+        protocol=s.kind, workers=s.workers, mode=s.mode,
+        throughput_mean=0.0, throughput_std=0.0, samples=[],
+        meta={"status": "error", "scenario": s.name,
+              "reason": f"{type(err).__name__}: {err}"})
+
+
+class _SweepContext:
+    """Lazily-built shared state (corpus, protocol instances, request
+    stream) so a --only run pays only for what it touches."""
+
+    def __init__(self, profile: Profile, platform: str):
+        self.profile = profile
+        self.platform = platform
+        self._corpus = None
+        self._single = None
+        self._loaders: Dict[str, LoaderProtocol] = {}
+        self._stream = None
+        self.peak_closed_ips = 0.0
+
+    @property
+    def corpus(self):
+        if self._corpus is None:
+            self._corpus = build_corpus(self.profile.corpus_n,
+                                        seed=self.profile.corpus_seed)
+        return self._corpus
+
+    @property
+    def single(self) -> SingleThreadProtocol:
+        if self._single is None:
+            self._single = SingleThreadProtocol(
+                self.corpus, repeats=self.profile.st_repeats,
+                platform=self.platform)
+        return self._single
+
+    def loader(self, mode: str) -> LoaderProtocol:
+        if mode not in self._loaders:
+            self._loaders[mode] = LoaderProtocol(
+                self.corpus, repeats=self.profile.loader_repeats,
+                mode=mode, platform=self.platform)
+        return self._loaders[mode]
+
+    @property
+    def stream(self):
+        if self._stream is None:
+            self._stream = service_load.request_stream(
+                self.corpus, self.profile.service_requests,
+                seed=self.profile.corpus_seed + 1)
+        return self._stream
+
+
+def _run_scenario(s: Scenario, ctx: _SweepContext) -> RunRecord:
+    if s.kind == KIND_SINGLE:
+        return ctx.single.run_path(DECODE_PATHS[s.path])
+    if s.kind == KIND_LOADER:
+        return ctx.loader(s.mode).run_path(DECODE_PATHS[s.path], s.workers)
+    if s.kind == KIND_BATCHED:
+        r = service_load.batched_vs_serial(
+            ctx.corpus, n_requests=ctx.profile.batched_requests,
+            seed=3, path_name=s.path)
+        return RunRecord(
+            platform=ctx.platform, decoder=s.path, protocol=KIND_BATCHED,
+            workers=0, mode="", throughput_mean=r["batched_ips"],
+            throughput_std=0.0, samples=[r["batched_ips"]],
+            num_images=r["n_requests"],
+            meta={"serial_ips": r["serial_ips"], "ratio": r["ratio"],
+                  "n_buckets": r["n_buckets"]})
+    if s.kind == KIND_SERVICE_CLOSED:
+        r = service_load.closed_loop(ctx.stream, s.workers)
+        ctx.peak_closed_ips = max(ctx.peak_closed_ips, r["throughput_ips"])
+        return RunRecord(
+            platform=ctx.platform, decoder="service",
+            protocol=KIND_SERVICE_CLOSED, workers=s.workers, mode=s.mode,
+            throughput_mean=r["throughput_ips"], throughput_std=0.0,
+            samples=[r["throughput_ips"]], num_images=len(ctx.stream),
+            meta={"router_best": r["router_best"],
+                  "cache_hits": r["cache_hits"], "p99_s": r["p99_s"]})
+    if s.kind == KIND_SERVICE_OPEN:
+        # offered rate pinned above capacity: the overload regime. Use the
+        # sweep's own measured closed-loop peak when available, else the
+        # serial baseline, as the capacity estimate.
+        cap = ctx.peak_closed_ips or service_load.serial_baseline(ctx.stream)
+        r = service_load.open_loop(ctx.stream, s.workers,
+                                   offered_rps=1.5 * cap)
+        return RunRecord(
+            platform=ctx.platform, decoder="service",
+            protocol=KIND_SERVICE_OPEN, workers=s.workers, mode=s.mode,
+            throughput_mean=r["delivered_ips"], throughput_std=0.0,
+            samples=[r["delivered_ips"]], num_images=len(ctx.stream),
+            meta={"offered_rps": r["offered_rps"],
+                  "shed_frac": r["shed_frac"], "p99_s": r["p99_s"]})
+    raise ValueError(f"unknown scenario kind {s.kind!r}")
+
+
+def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
+              out_dir: Optional[str] = DEFAULT_OUT,
+              platform: str = "live-host",
+              progress=None) -> SweepResult:
+    """Execute the scenario matrix under ``profile``.
+
+    ``only`` restricts the sweep to matching scenarios (see
+    registry.select_scenarios); unmatched cells are omitted entirely.
+    Cells matched but outside the profile's budget become explicit
+    skipped records. Scenario failures become error records — one broken
+    path must not take down the sweep that measures the other fifteen.
+    """
+    if profile not in PROFILES:
+        raise ValueError(f"unknown profile {profile!r}; "
+                         f"valid: {sorted(PROFILES)}")
+    prof = PROFILES[profile]
+    scenarios = select_scenarios(only)
+    ctx = _SweepContext(prof, platform)
+    records: List[RunRecord] = []
+    t_start = time.perf_counter()
+    for s in scenarios:
+        run_it, reason = prof.wants(s)
+        if not run_it:
+            records.append(_skip_record(s, reason, platform))
+            continue
+        t0 = time.perf_counter()
+        try:
+            rec = _run_scenario(s, ctx)
+            if rec.meta.get("eligible", True):
+                rec.meta.setdefault("status", "ok")
+            else:
+                # ineligible cells (e.g. jax paths x process pool) are
+                # never measured: account them as skips, not 0-img/s oks
+                rec.meta["status"] = "skipped"
+                rec.meta.setdefault("reason", "not eligible")
+            rec.meta["scenario"] = s.name
+            rec.meta["elapsed_s"] = round(time.perf_counter() - t0, 3)
+        except Exception as e:                 # noqa: BLE001 — isolate cell
+            rec = _error_record(s, e, platform)
+        validate_record(rec.to_json())
+        records.append(rec)
+        if progress is not None:
+            progress(s, rec)
+    elapsed = time.perf_counter() - t_start
+    files = []
+    if out_dir:
+        files = _save(records, prof, elapsed, out_dir)
+    return SweepResult(profile=profile, records=records,
+                       elapsed_s=elapsed, out_dir=out_dir, files=files)
+
+
+# ---------------------------------------------------------------- artifacts
+def _scenario_file(name: str) -> str:
+    return name.replace("/", "__") + ".json"
+
+
+def _save(records: List[RunRecord], prof: Profile, elapsed: float,
+          out_dir: str) -> List[str]:
+    os.makedirs(os.path.join(out_dir, "scenarios"), exist_ok=True)
+    files = []
+
+    combined = os.path.join(out_dir, f"records_{prof.name}.json")
+    save_records(records, combined,
+                 extra={"profile": prof.name,
+                        "elapsed_s": round(elapsed, 3)})
+    files.append(combined)
+
+    for r in records:
+        p = os.path.join(out_dir, "scenarios",
+                         _scenario_file(r.scenario))
+        save_records([r], p, extra={"profile": prof.name})
+        files.append(p)
+
+    rec = decision.recommend(records)
+    summary = {
+        "profile": prof.name,
+        "elapsed_s": round(elapsed, 3),
+        "budget_s": prof.budget_s,
+        "host": host_fingerprint(),
+        "status_counts": _status_counts(records),
+        "tier": [dataclasses.asdict(t) for t in rec["tier"]],
+        "best_mean": rec.get("best_mean"),
+        "best_floor": rec.get("best_floor"),
+        "protocol_disagreement": rec["protocol_disagreement"],
+    }
+    sp = os.path.join(out_dir, f"summary_{prof.name}.json")
+    with open(sp, "w") as f:
+        json.dump(summary, f, indent=1, default=str)
+    files.append(sp)
+
+    rp = os.path.join(out_dir, f"report_{prof.name}.md")
+    with open(rp, "w") as f:
+        f.write(render_report(records, summary))
+    files.append(rp)
+    return files
+
+
+def _status_counts(records: List[RunRecord]) -> Dict[str, int]:
+    out = {"ok": 0, "skipped": 0, "error": 0}
+    for r in records:
+        out[r.status] = out.get(r.status, 0) + 1
+    return out
+
+
+def render_report(records: List[RunRecord], summary: dict) -> str:
+    """The derived markdown report: scenario accounting + the paper's
+    decision views, regenerated from records only."""
+    host = summary["host"]
+    live = [r for r in records if r.ok]
+    tier = decision.robust_tier(records, floor=0.5)
+    parts = [
+        f"# Bench sweep — profile `{summary['profile']}`",
+        "",
+        f"Host: {host['cpu_model']} ({host['cpus']} cpus, "
+        f"{host['machine']}) — fingerprint `{host['fingerprint']}` — "
+        f"python {host['python']}, jax {host['jax']}, "
+        f"numpy {host['numpy']}",
+        f"Wall clock: {summary['elapsed_s']:.1f}s "
+        f"(budget {summary['budget_s']:.0f}s)",
+        "",
+        "## Scenario status",
+        report.status_report(records),
+        "",
+        "## Single-thread protocol",
+        report.single_thread_report(live),
+        "",
+        "## DataLoader protocol",
+        report.loader_report(live),
+        "",
+        "## Zero-skip tier (floor 50%, live host)",
+        report.tier_report(tier),
+        "",
+        "## Protocol disagreement (single-thread vs loader rank)",
+        report.flip_report(summary["protocol_disagreement"]),
+        "",
+    ]
+    norm = {}
+    peaks = decision.peak_loader_throughput(records)
+    for plat, by_dec in peaks.items():
+        norm[plat] = decision.normalized(by_dec)
+    if norm:
+        parts.append("## Normalized loader throughput "
+                     "(1.0 = platform-local winner)")
+        for plat, vals in sorted(norm.items()):
+            rows = [[d, f"{v:.3f}"] for d, v in
+                    sorted(vals.items(), key=lambda kv: -kv[1])]
+            parts.append(report.md_table(["decoder", f"{plat}"], rows))
+            parts.append("")
+    np_note = ("\n*(speedups <= 1 are expected on few-vCPU hosts; the "
+               "protocol — not this host's numbers — is the artifact)*\n")
+    parts.append(np_note)
+    return "\n".join(parts)

@@ -1,0 +1,201 @@
+"""The scenario registry: the paper's protocol matrix as enumerable data.
+
+Every registered decode path crosses every evaluation protocol the paper
+names — single-thread, DataLoader-shaped worker sweep {0,2,4,8} x
+{thread, process} pool modes, batched decode, and the online service's
+closed/open-loop load models. A *profile* (smoke / quick / full) selects
+which cells actually execute; cells a profile leaves out are still
+emitted as explicitly-skipped records, so every record set answers "was
+this scenario measured, skipped, or broken?" for the full matrix — the
+accounting discipline the paper argues ad-hoc benchmarks lack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from repro.jpeg.paths import DECODE_PATHS
+
+WORKER_SWEEP = (0, 2, 4, 8)
+POOL_MODES = ("thread", "process")
+
+KIND_SINGLE = "single_thread"
+KIND_LOADER = "dataloader"
+KIND_BATCHED = "batched"
+KIND_SERVICE_CLOSED = "service_closed"
+KIND_SERVICE_OPEN = "service_open"
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the protocol matrix. ``name`` is the stable compare
+    key carried in every emitted record's ``meta.scenario``."""
+    name: str
+    kind: str
+    path: str = ""                 # decode path; "" for service scenarios
+    workers: int = 0
+    mode: str = ""                 # thread | process for loader cells
+
+
+def build_registry() -> List[Scenario]:
+    """The full matrix, in deterministic emission order."""
+    out: List[Scenario] = []
+    for p in DECODE_PATHS:
+        out.append(Scenario(f"single/{p}", KIND_SINGLE, path=p))
+    for p in DECODE_PATHS:
+        for w in WORKER_SWEEP:
+            # w=0 decodes inline in the consumer; pool mode is moot, so
+            # the matrix has one w0 cell per path (thread label).
+            modes = ("thread",) if w == 0 else POOL_MODES
+            for m in modes:
+                out.append(Scenario(f"loader/{p}/w{w}/{m}", KIND_LOADER,
+                                    path=p, workers=w, mode=m))
+    for p, path in DECODE_PATHS.items():
+        if path.batch_fn is not None:
+            out.append(Scenario(f"batched/{p}", KIND_BATCHED, path=p))
+    for w in WORKER_SWEEP:
+        out.append(Scenario(f"service/closed/w{w}", KIND_SERVICE_CLOSED,
+                            workers=w, mode="thread"))
+    for w in WORKER_SWEEP[1:]:
+        out.append(Scenario(f"service/open/w{w}", KIND_SERVICE_OPEN,
+                            workers=w, mode="thread"))
+    return out
+
+
+def scenario_names() -> List[str]:
+    return [s.name for s in build_registry()]
+
+
+# ------------------------------------------------------------------ profiles
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """Execution budget for a sweep: corpus size, repeat counts, and the
+    subset of matrix cells that actually run (the rest are emitted as
+    explicit skips)."""
+    name: str
+    corpus_n: int
+    corpus_seed: int
+    st_repeats: int
+    loader_repeats: int
+    service_requests: int
+    batched_requests: int
+    single_paths: FrozenSet[str]
+    loader_cells: FrozenSet[Tuple[str, int, str]]
+    batched_paths: FrozenSet[str]
+    service_closed: FrozenSet[int]
+    service_open: FrozenSet[int]
+    budget_s: float                # advisory wall-clock target
+
+    def wants(self, s: Scenario) -> Tuple[bool, str]:
+        """(run?, reason-if-skipped) for one scenario under this profile."""
+        if s.kind == KIND_SINGLE:
+            if s.path in self.single_paths:
+                return True, ""
+        elif s.kind == KIND_LOADER:
+            if (s.path, s.workers, s.mode) in self.loader_cells:
+                return True, ""
+        elif s.kind == KIND_BATCHED:
+            if s.path in self.batched_paths:
+                return True, ""
+        elif s.kind == KIND_SERVICE_CLOSED:
+            if s.workers in self.service_closed:
+                return True, ""
+        elif s.kind == KIND_SERVICE_OPEN:
+            if s.workers in self.service_open:
+                return True, ""
+        return False, f"not in profile {self.name!r}"
+
+
+def _paths(*, engines: Optional[Tuple[str, ...]] = None,
+           exclude: Tuple[str, ...] = ()) -> FrozenSet[str]:
+    return frozenset(
+        p.name for p in DECODE_PATHS.values()
+        if (engines is None or p.engine in engines)
+        and p.name not in exclude)
+
+
+def _cells(paths, workers, modes) -> FrozenSet[Tuple[str, int, str]]:
+    return frozenset(
+        (p, w, m) for p in paths for w in workers
+        for m in (("thread",) if w == 0 else modes))
+
+
+# Pallas paths run interpret-mode on CPU — a correctness surface, not a
+# timing one — so only the full profile pays for them. The smoke profile
+# is sized for a 2-vCPU CI runner.
+_SMOKE_SINGLE = _paths(engines=("numpy", "jnp"))
+_QUICK_SINGLE = _paths(engines=("numpy", "jnp"),
+                       exclude=("jnp-basic", "jnp-batched"))
+
+PROFILES: Dict[str, Profile] = {
+    "smoke": Profile(
+        name="smoke", corpus_n=8, corpus_seed=42,
+        st_repeats=2, loader_repeats=1,
+        service_requests=16, batched_requests=24,
+        single_paths=_SMOKE_SINGLE,
+        loader_cells=_cells(("numpy-fast", "jnp-fused"), (0, 2),
+                            ("thread",))
+        | frozenset({("numpy-fast", 2, "process")}),
+        batched_paths=frozenset({"jnp-batch"}),
+        service_closed=frozenset({2}),
+        service_open=frozenset(),
+        budget_s=240.0),
+    "quick": Profile(
+        name="quick", corpus_n=48, corpus_seed=42,
+        st_repeats=2, loader_repeats=1,
+        service_requests=96, batched_requests=48,
+        single_paths=_QUICK_SINGLE,
+        loader_cells=_cells(sorted(_QUICK_SINGLE), (0, 2), ("thread",))
+        | frozenset({("numpy-fast", 2, "process"),
+                     ("numpy-int", 2, "process")}),
+        batched_paths=frozenset({"jnp-batch"}),
+        service_closed=frozenset({0, 2}),
+        service_open=frozenset({2}),
+        budget_s=900.0),
+    "full": Profile(
+        name="full", corpus_n=200, corpus_seed=42,
+        st_repeats=3, loader_repeats=2,
+        service_requests=512, batched_requests=192,
+        single_paths=frozenset(DECODE_PATHS),
+        loader_cells=_cells(DECODE_PATHS, WORKER_SWEEP, POOL_MODES),
+        batched_paths=frozenset(
+            p.name for p in DECODE_PATHS.values()
+            if p.batch_fn is not None),
+        service_closed=frozenset(WORKER_SWEEP),
+        service_open=frozenset(WORKER_SWEEP[1:]),
+        budget_s=7200.0),
+}
+
+
+class BenchSelectionError(ValueError):
+    """--only named a scenario that does not exist; lists valid names."""
+
+
+def select_scenarios(only: Optional[List[str]] = None) -> List[Scenario]:
+    """Resolve --only tokens to scenarios. A token matches a scenario by
+    exact name or as a '/'-boundary prefix (``loader/numpy-fast`` selects
+    that path's whole worker sweep). Unknown tokens are a hard error that
+    names the valid vocabulary — never a silent no-op.
+    """
+    registry = build_registry()
+    if not only:
+        return registry
+    selected: List[Scenario] = []
+    seen = set()
+    for token in only:
+        token = token.strip().rstrip("/")
+        hits = [s for s in registry
+                if s.name == token or s.name.startswith(token + "/")]
+        if not hits:
+            families = sorted({s.name.split("/")[0] for s in registry})
+            raise BenchSelectionError(
+                f"unknown scenario {token!r}. Valid families: "
+                f"{', '.join(families)}. Valid names include: "
+                f"{', '.join(s.name for s in registry[:6])}, ... "
+                f"(run `benchmarks/run.py list` for all "
+                f"{len(registry)} scenarios)")
+        for s in hits:
+            if s.name not in seen:
+                seen.add(s.name)
+                selected.append(s)
+    return selected

@@ -20,7 +20,6 @@ host):
 """
 from __future__ import annotations
 
-import json
 import os
 import re
 import shutil

@@ -1,12 +1,22 @@
-"""Target-hardware constants for roofline analysis.
+"""Target-hardware constants for roofline analysis + host fingerprinting.
 
 The runtime here is CPU-only; TPU v5e is the *target*. These constants feed the
 three-term roofline (compute / memory / collective) derived from the compiled
 dry-run artifacts. Sources: public TPU v5e specs.
+
+``host_fingerprint()`` is the bench harness's machine identity: every emitted
+record set carries it so results are only ever compared across commits on the
+same (or an explicitly acknowledged different) host — the paper's core point
+is that the platform is part of the claim.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
+import os
+import platform as _platform
+import sys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +44,54 @@ TPU_V5E = ChipSpec(
 MXU_DIM = 128
 VPU_LANES = 128
 VPU_SUBLANES = 8
+
+
+def _cpu_model() -> str:
+    """Best-effort CPU model name (``platform.processor()`` is often empty
+    on Linux; /proc/cpuinfo has the marketing string)."""
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return _platform.processor() or "unknown"
+
+
+@functools.lru_cache(maxsize=1)
+def _host_info() -> tuple:
+    import numpy as np
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:                     # bench host without jax installed
+        jax_version = "none"
+    info = {
+        "cpu_model": _cpu_model(),
+        "cpus": os.cpu_count(),
+        "machine": _platform.machine(),
+        "system": _platform.system(),
+        "python": sys.version.split()[0],
+        "numpy": np.__version__,
+        "jax": jax_version,
+    }
+    key = "|".join(f"{k}={info[k]}" for k in sorted(info))
+    info["fingerprint"] = hashlib.sha256(key.encode()).hexdigest()[:12]
+    info["hostname"] = _platform.node()
+    return tuple(info.items())
+
+
+def host_fingerprint() -> dict:
+    """Stable identity of the machine a benchmark ran on.
+
+    ``fingerprint`` hashes only the fields that change benchmark meaning
+    (CPU model, core count, arch, python/jax/numpy versions) — not
+    hostname or time — so two runs on identical hosts compare cleanly.
+    Computed once per process (a sweep saves ~140 record files, each
+    stamped with it); callers get a fresh copy.
+    """
+    return dict(_host_info())
 
 
 def roofline_terms(

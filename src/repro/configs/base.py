@@ -8,8 +8,7 @@ full config is only ever lowered abstractly by the dry-run.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 
 def _round_up(x: int, m: int) -> int:

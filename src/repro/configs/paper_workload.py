@@ -8,7 +8,7 @@ for a machine that has the real split available.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

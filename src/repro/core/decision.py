@@ -10,7 +10,7 @@ Converts benchmark records into deployment recommendations:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import numpy as np
 
@@ -55,10 +55,14 @@ def required_protocol(question: str) -> str:
 # ------------------------------------------------------------- aggregation
 def peak_loader_throughput(records: Sequence[RunRecord]
                            ) -> Dict[str, Dict[str, RunRecord]]:
-    """platform -> decoder -> peak-worker loader record."""
+    """platform -> decoder -> peak-worker loader record.
+
+    Explicit scenario skips/errors (``not r.ok``) carry zero throughput
+    and never enter an aggregate."""
     out: Dict[str, Dict[str, RunRecord]] = {}
     for r in records:
-        if r.protocol != "dataloader" or not r.meta.get("eligible", True):
+        if r.protocol != "dataloader" or not r.meta.get("eligible", True) \
+                or not r.ok:
             continue
         best = out.setdefault(r.platform, {}).get(r.decoder)
         if best is None or r.throughput_mean > best.throughput_mean:
@@ -70,7 +74,7 @@ def single_thread_table(records: Sequence[RunRecord]
                         ) -> Dict[str, Dict[str, RunRecord]]:
     out: Dict[str, Dict[str, RunRecord]] = {}
     for r in records:
-        if r.protocol == "single_thread":
+        if r.protocol == "single_thread" and r.ok:
             out.setdefault(r.platform, {})[r.decoder] = r
     return out
 
@@ -108,10 +112,6 @@ def robust_tier(records: Sequence[RunRecord], *,
         # normalization vs *all* eligible decoders (platform-local winner)
         norm = normalized(peaks[plat])
         zs = zero_skip(peaks[plat])
-        for d in zs:
-            per_decoder.setdefault(d, [None] * len(platforms))
-        for i, _ in enumerate(platforms):
-            pass
         for d, v in norm.items():
             if d in zs:
                 per_decoder.setdefault(d, [None] * len(platforms))
@@ -144,20 +144,20 @@ def recommend(records: Sequence[RunRecord]) -> Dict[str, object]:
             continue
         s = {d: r.throughput_mean for d, r in singles[plat].items()
              if d in peaks[plat]}
-        l = {d: r.throughput_mean for d, r in peaks[plat].items()
-             if d in s}
-        if not s or not l:
+        ld = {d: r.throughput_mean for d, r in peaks[plat].items()
+              if d in s}
+        if not s or not ld:
             continue
         s_leader = max(s, key=s.get)
-        l_leader = max(l, key=l.get)
+        l_leader = max(ld, key=ld.get)
         gap = 0.0
-        if s_leader != l_leader:
-            gap = 1.0 - l[s_leader] / l[l_leader]
+        if s_leader != l_leader and ld[l_leader] > 0:
+            gap = 1.0 - ld[s_leader] / ld[l_leader]
         disagreements[plat] = {
             "single_leader": s_leader, "loader_leader": l_leader,
-            "rho": stats.spearman_rho(list(s.values()), list(l.values())),
+            "rho": stats.spearman_rho(list(s.values()), list(ld.values())),
             "single_leader_gap": gap,
-            "largest_move": stats.largest_rank_move(s, l),
+            "largest_move": stats.largest_rank_move(s, ld),
         }
     rec["protocol_disagreement"] = disagreements
     return rec

@@ -8,7 +8,7 @@ derived claims (gaps, tiers, counts) from its own numbers.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Optional
 
 PLATFORMS = ["Intel 8581C", "AMD Zen 4", "AMD Zen 5", "Neoverse V2",
              "Neoverse N1"]

@@ -16,7 +16,7 @@ tiers) runs downstream on records only — identical for live and recorded
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -114,6 +114,7 @@ class LoaderProtocol:
                 n += batch["image"].shape[0]
             one_pass.skips = loader.ledger.indices()
             one_pass.n = n
+            one_pass.loader_stats = loader.stats()
 
         one_pass()
         samples = _thr_samples(one_pass, len(self.corpus.files), self.repeats)
@@ -126,7 +127,8 @@ class LoaderProtocol:
             samples=samples, num_images=len(self.corpus.files),
             skip_indices=one_pass.skips,
             meta={"engine": path.engine, "strict": path.strict,
-                  "eligible": True, "delivered": one_pass.n})
+                  "eligible": True, "delivered": one_pass.n,
+                  "loader": one_pass.loader_stats})
 
 
 class WorkerSweep:

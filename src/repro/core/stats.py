@@ -1,14 +1,41 @@
 """Statistical policy of the paper (§3): descriptive mean±std, Spearman rank
 correlation over raw samples, and practical-significance thresholds (1%
-single-thread, 5% DataLoader) before strict faster/slower language."""
+single-thread, 5% DataLoader) before strict faster/slower language.
+
+The same thresholds drive the bench compare gate: a cross-commit delta is
+only a regression once it clears both the protocol's practical threshold
+and the measured run-to-run noise (``noise_gate``)."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
 SINGLE_THREAD_THRESHOLD = 0.01
 DATALOADER_THRESHOLD = 0.05
+
+
+def protocol_threshold(protocol: str) -> float:
+    """Practical-significance floor by evaluation protocol. Anything that
+    goes through a pool/queue (dataloader, service) gets the looser 5%."""
+    return (SINGLE_THREAD_THRESHOLD if protocol == "single_thread"
+            else DATALOADER_THRESHOLD)
+
+
+def coefficient_of_variation(samples: Sequence[float]) -> float:
+    m, s = mean_std(samples)
+    return s / m if m > 0 else 0.0
+
+
+def noise_gate(samples_a: Sequence[float], samples_b: Sequence[float],
+               *, z: float = 2.0) -> float:
+    """Relative delta explainable by run-to-run noise alone: z times the
+    combined coefficient of variation of the two sample sets. With < 2
+    samples a side contributes zero — the practical threshold then carries
+    the gate."""
+    cv_a = coefficient_of_variation(samples_a)
+    cv_b = coefficient_of_variation(samples_b)
+    return z * float(np.sqrt(cv_a ** 2 + cv_b ** 2))
 
 
 def mean_std(samples: Sequence[float]) -> Tuple[float, float]:

@@ -134,6 +134,20 @@ class DataLoader:
         self._latencies: List[float] = []
 
     # ------------------------------------------------------------ state
+    def stats(self) -> Dict[str, Any]:
+        """Operational snapshot for bench records: per-item decode latency
+        percentiles (whatever the worker saw, including queueing inside a
+        chunk) plus skip accounting."""
+        lat = sorted(self._latencies)
+
+        def pct(p: float) -> float:
+            if not lat:
+                return 0.0
+            return lat[min(int(p * len(lat)), len(lat) - 1)]
+
+        return {"latency_p50_s": pct(0.50), "latency_p99_s": pct(0.99),
+                "measured_items": len(lat), "skips": self.ledger.count}
+
     def state(self) -> Dict[str, Any]:
         return {"epoch": self.epoch, "cursor": self.cursor,
                 "skips": self.ledger.state(),

@@ -23,7 +23,7 @@ same global batch and a loss curve that proceeds from the checkpoint.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

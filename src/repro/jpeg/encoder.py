@@ -10,7 +10,7 @@ reject.
 from __future__ import annotations
 
 import struct
-from typing import List, Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

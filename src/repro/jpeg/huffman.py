@@ -7,7 +7,7 @@ Decode uses 16-bit-window LUTs (libjpeg-style) rather than per-bit walks.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

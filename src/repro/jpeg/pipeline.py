@@ -6,8 +6,8 @@ tiling. All decode paths share these building blocks.
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
-from typing import Dict, List, Optional, Sequence
+from functools import partial
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp

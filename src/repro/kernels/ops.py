@@ -5,7 +5,6 @@ Handles padding to tile multiples, dtype casts, and interpret-mode fallback
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,8 +14,6 @@ from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.common import hlo as hlo_mod

@@ -6,8 +6,7 @@ stubs per the assignment — ``input_specs`` supplies precomputed embeddings.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ def main() -> None:
 
     from repro.checkpoint import CheckpointManager
     from repro.configs import get_config
-    from repro.distributed.sharding import (batch_specs, make_context,
+    from repro.distributed.sharding import (make_context,
                                             param_specs)
     from repro.launch.mesh import make_host_mesh
     from repro.train import OptimizerConfig

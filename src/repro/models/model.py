@@ -15,14 +15,12 @@ Entry points:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LayerSpec, ModelConfig, Stage
+from repro.configs.base import LayerSpec, ModelConfig
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM

@@ -16,7 +16,6 @@ Both return (y, aux_loss) where aux is the switch-style load-balance loss.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Tuple
 
 import jax

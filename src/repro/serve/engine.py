@@ -5,8 +5,7 @@ new token per sequence against a persistent sharded KV/SSM cache.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,9 +1,9 @@
 """Online JPEG decode service (see DESIGN.md §service).
 
 The paper's protocol turned into a runtime: an async micro-batching
-engine serving decode requests through the 14 registered paths, with a
-bandit router that learns per-path service throughput in situ and the
-skip ledger promoted from accounting to a routing signal.
+engine serving decode requests through the sixteen registered paths,
+with a bandit router that learns per-path service throughput in situ and
+the skip ledger promoted from accounting to a routing signal.
 """
 from repro.service.admission import AdmissionController, ServiceOverloaded
 from repro.service.batcher import Batch, MicroBatcher, bucket_key

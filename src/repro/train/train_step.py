@@ -10,7 +10,7 @@ sharding trees from ``repro.distributed``. State layout::
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ import sys
 # their own flags (jax locks device count at first init).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import pytest
 
 from repro.jpeg.corpus import Corpus, build_corpus

@@ -1,0 +1,230 @@
+"""Bench subsystem: schema round-trip, scenario registry, smoke-profile
+sweep (budget + matrix completeness), and the compare gate."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.bench import (BenchSelectionError, PROFILES, build_registry,
+                         compare_records, run_sweep, select_scenarios)
+from repro.bench.compare import compare_paths
+from repro.core import decision
+from repro.core.schema import (RunRecord, SchemaError, load_records,
+                               save_records, validate_record)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _rec(decoder="numpy-fast", protocol="single_thread", workers=0,
+         mode="", thr=100.0, samples=None, scenario=None, status="ok"):
+    meta = {"status": status}
+    if scenario:
+        meta["scenario"] = scenario
+    return RunRecord(platform="live-host", decoder=decoder,
+                     protocol=protocol, workers=workers, mode=mode,
+                     throughput_mean=thr, throughput_std=1.0,
+                     samples=samples or [thr - 1, thr, thr + 1],
+                     num_images=10, skip_indices=[], meta=meta)
+
+
+# ------------------------------------------------------------------ schema
+def test_schema_roundtrip(tmp_path):
+    recs = [_rec(), _rec(decoder="jnp-fused", protocol="dataloader",
+                         workers=4, mode="thread")]
+    p = tmp_path / "records.json"
+    save_records(recs, str(p), extra={"profile": "test"})
+    payload = json.load(open(p))
+    assert payload["schema_version"] == 2
+    assert payload["profile"] == "test"
+    assert "fingerprint" in payload["host"]
+    back = load_records(str(p))
+    assert [r.to_json() for r in back] == [r.to_json() for r in recs]
+
+
+@pytest.mark.parametrize("mutate,msg", [
+    (lambda d: d.update(protocol="warp_speed"), "protocol"),
+    (lambda d: d.update(mode="fiber"), "mode"),
+    (lambda d: d.update(workers=-1), "workers"),
+    (lambda d: d.update(throughput_mean="fast"), "throughput_mean"),
+    (lambda d: d.update(samples=[1.0, "x"]), "samples"),
+    (lambda d: d.update(skip_indices=[1.5]), "skip_indices"),
+    (lambda d: d.update(bogus_field=1), "bogus_field"),
+    (lambda d: d.pop("decoder"), "decoder"),
+    (lambda d: d["meta"].update(status="exploded"), "status"),
+])
+def test_schema_rejects_malformed(mutate, msg):
+    d = _rec().to_json()
+    mutate(d)
+    with pytest.raises(SchemaError, match=msg):
+        validate_record(d)
+
+
+def test_skip_records_excluded_from_decision():
+    recs = [_rec(protocol="dataloader", workers=2, mode="thread", thr=50),
+            _rec(decoder="ghost", protocol="dataloader", workers=2,
+                 mode="thread", thr=999, status="skipped")]
+    peaks = decision.peak_loader_throughput(recs)
+    assert set(peaks["live-host"]) == {"numpy-fast"}
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_covers_matrix():
+    scenarios = build_registry()
+    names = [s.name for s in scenarios]
+    assert len(names) == len(set(names))
+    from repro.jpeg.paths import DECODE_PATHS
+    singles = {s.path for s in scenarios if s.kind == "single_thread"}
+    assert singles == set(DECODE_PATHS)       # all sixteen paths
+    loader = [s for s in scenarios if s.kind == "dataloader"]
+    assert {s.workers for s in loader} == {0, 2, 4, 8}
+    assert {s.mode for s in loader} == {"thread", "process"}
+
+
+def test_select_scenarios_prefix_and_errors():
+    picked = select_scenarios(["loader/numpy-fast"])
+    assert picked and all(s.path == "numpy-fast" for s in picked)
+    assert len(picked) == 7                   # w0 + {2,4,8} x {thread,process}
+    exact = select_scenarios(["single/jnp-fused"])
+    assert [s.name for s in exact] == ["single/jnp-fused"]
+    with pytest.raises(BenchSelectionError, match="single/numpy-ref"):
+        select_scenarios(["single/nvjpeg"])
+
+
+def test_run_py_only_validation_errors():
+    sys.path.insert(0, REPO)
+    from benchmarks import run as run_cli
+    assert run_cli.main(["sweep", "--only", "bogus"]) == 2
+    assert run_cli.main(["tables", "--only", "bogus"]) == 2
+    assert run_cli.main(["nonsense"]) == 2
+
+
+# ------------------------------------------------------------------- sweep
+@pytest.fixture(scope="module")
+def smoke_sweep(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("bench"))
+    return run_sweep("smoke", out_dir=out)
+
+
+def test_smoke_sweep_budget_and_completeness(smoke_sweep):
+    prof = PROFILES["smoke"]
+    assert smoke_sweep.elapsed_s < prof.budget_s
+    from repro.jpeg.paths import DECODE_PATHS
+    by_path = {r.decoder: r for r in smoke_sweep.records
+               if r.protocol == "single_thread"}
+    # every registered path is present: measured or explicitly skipped
+    assert set(by_path) == set(DECODE_PATHS)
+    for r in by_path.values():
+        assert r.status in ("ok", "skipped")
+        if r.status == "skipped":
+            assert r.meta["reason"]
+    assert not [r for r in smoke_sweep.records if r.status == "error"]
+    # the matrix beyond single-thread ran too
+    protos = {r.protocol for r in smoke_sweep.records if r.ok}
+    assert {"single_thread", "dataloader", "batched",
+            "service_closed"} <= protos
+    modes = {(r.workers, r.mode) for r in smoke_sweep.records
+             if r.protocol == "dataloader" and r.ok}
+    assert (2, "thread") in modes and (2, "process") in modes
+
+
+def test_smoke_sweep_artifacts_validate(smoke_sweep):
+    combined = os.path.join(smoke_sweep.out_dir, "records_smoke.json")
+    back = load_records(combined)             # validates every record
+    assert len(back) == len(smoke_sweep.records)
+    per_scenario = os.path.join(smoke_sweep.out_dir, "scenarios")
+    files = os.listdir(per_scenario)
+    assert len(files) == len(smoke_sweep.records)
+    one = load_records(os.path.join(per_scenario,
+                                    "single__numpy-fast.json"))
+    assert one[0].decoder == "numpy-fast" and one[0].ok
+    assert os.path.exists(os.path.join(smoke_sweep.out_dir,
+                                       "report_smoke.md"))
+
+
+def test_smoke_records_feed_decision(smoke_sweep):
+    rec = decision.recommend(smoke_sweep.records)
+    assert "live-host" in rec["protocol_disagreement"]
+    tier = decision.robust_tier(smoke_sweep.records, floor=0.1)
+    assert all(t.decoder for t in tier)
+
+
+# ----------------------------------------------------------------- compare
+def _fixture_sets():
+    base = [_rec(scenario="single/numpy-fast", thr=100,
+                 samples=[99, 100, 101]),
+            _rec(decoder="jnp-fused", protocol="dataloader", workers=2,
+                 mode="thread", scenario="loader/jnp-fused/w2/thread",
+                 thr=50, samples=[49, 50, 51]),
+            _rec(decoder="pallas-idct", scenario="single/pallas-idct",
+                 thr=0, samples=[], status="skipped")]
+    return base
+
+
+def test_compare_identity_passes():
+    base = _fixture_sets()
+    res = compare_records(base, base)
+    assert res.n_fail == 0 and res.n_warn == 0
+    assert res.exit_code() == 0
+
+
+def test_compare_fails_on_2x_regression():
+    base = _fixture_sets()
+    new = _fixture_sets()
+    new[0].throughput_mean = 33.0             # 3x slowdown
+    new[0].samples = [32.0, 33.0, 34.0]
+    res = compare_records(base, new)
+    assert res.n_fail == 1
+    assert res.exit_code() == 2
+    assert res.exit_code(warn_only=True) == 0
+    entry = res.by_verdict("fail")[0]
+    assert entry.scenario == "single/numpy-fast"
+
+
+def test_compare_warns_inside_fail_window():
+    base = _fixture_sets()
+    new = _fixture_sets()
+    new[1].throughput_mean = 42.0             # -16%: warn, not fail
+    new[1].samples = [41.0, 42.0, 43.0]
+    res = compare_records(base, new)
+    assert res.n_fail == 0 and res.n_warn == 1
+
+
+def test_compare_noise_widens_gate():
+    base = _fixture_sets()
+    noisy_old = _rec(scenario="s", thr=100, samples=[60, 100, 140])
+    noisy_new = _rec(scenario="s", thr=85, samples=[45, 85, 125])
+    res = compare_records(base + [noisy_old], _fixture_sets() + [noisy_new])
+    e = [x for x in res.entries if x.scenario == "s"][0]
+    assert e.verdict == "ok"                  # -15% but sigma is huge
+    assert e.threshold > 0.15
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    base = _fixture_sets()
+    regressed = _fixture_sets()
+    regressed[0].throughput_mean = 20.0
+    regressed[0].samples = [19.0, 20.0, 21.0]
+    save_records(base, a)
+    save_records(regressed, b)
+    res = compare_paths(a, b)
+    assert res.exit_code() == 2
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "compare", a, b], env=env, capture_output=True, text=True,
+        timeout=120)
+    assert proc.returncode == 2, proc.stderr
+    assert "fail" in proc.stdout
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "compare", a, b, "--warn-only"], env=env, capture_output=True,
+        text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr

@@ -1,6 +1,5 @@
 """Statistics + decision protocol, validated against the paper's own
 published numbers (the reproduction's correctness anchor)."""
-import numpy as np
 import pytest
 
 from repro.core import decision, paper_data as PD, stats

@@ -3,7 +3,6 @@ training with checkpoint/restart; protocol pipeline on live measurements."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.core import decision
