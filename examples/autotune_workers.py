@@ -7,17 +7,16 @@ Run:  PYTHONPATH=src python examples/autotune_workers.py
 from repro.data.autotune import autotune_workers
 from repro.data.loader import DataLoader, LoaderConfig
 from repro.jpeg.corpus import build_corpus
-from repro.jpeg.paths import DECODE_PATHS
 
 
 def main():
     corpus = build_corpus(48, seed=9)
     for name in ["numpy-fast", "numpy-int", "fft-idct"]:
-        decode = DECODE_PATHS[name].decode
-
-        def factory(w, decode=decode):
-            return DataLoader(corpus.files, corpus.labels, decode,
-                              LoaderConfig(batch_size=8, num_workers=w))
+        def factory(w, name=name):
+            # decode fns resolve from the codecs registry by path name
+            return DataLoader(corpus.files, corpus.labels,
+                              cfg=LoaderConfig(batch_size=8, num_workers=w),
+                              path_name=name)
 
         res = autotune_workers(factory, candidates=(0, 2, 4, 8),
                                max_items=32, repeats=1)

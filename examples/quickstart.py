@@ -1,14 +1,19 @@
-"""Quickstart: encode a JPEG corpus, decode it three ways, benchmark the two
-protocols, and get an operational recommendation — the paper's workflow in
-~40 lines.
+"""Quickstart: encode a JPEG corpus, decode it through capability-typed
+decoder sessions, benchmark the two protocols, and get an operational
+recommendation — the paper's workflow in ~50 lines.
+
+The front door is ``repro.codecs``: ``open_decoder(name, context=...)``
+returns a session whose ``decode`` yields a typed outcome
+(image | skip | error), and the ``eligible(caps, context)`` resolver —
+not scattered booleans — decides which decoder may run where.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+from repro.codecs import ExecContext, eligible, get_decoder, open_decoder
 from repro.core import decision
 from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
 from repro.jpeg.corpus import build_corpus
-from repro.jpeg.paths import DECODE_PATHS
 
 
 def main():
@@ -17,18 +22,31 @@ def main():
     print(f"corpus: {len(corpus.files)} JPEGs, rare index "
           f"{corpus.rare_index}")
 
-    # 2. decode one image through three engines
+    # 2. decode one image through three engines, as decoder sessions
     for name in ["numpy-fast", "jnp-fused", "pallas-idct"]:
-        img = DECODE_PATHS[name].decode(corpus.files[0])
-        print(f"  {name:12s} -> {img.shape} {img.dtype}")
+        with open_decoder(name, context=ExecContext.INLINE) as dec:
+            img = dec.decode(corpus.files[0]).unwrap()
+            print(f"  {name:12s} -> {img.shape} {img.dtype} "
+                  f"bucket={dec.probe(corpus.files[0])[:2]}")
 
-    # 3. the two protocols
+    # 2b. a strict decoder *skips* the rare mode instead of erroring
+    with open_decoder("strict-fast") as dec:
+        out = dec.decode(corpus.files[corpus.rare_index])
+        print(f"  strict-fast on rare image -> {out.kind}: {out.reason}")
+
+    # 2c. eligibility is a (capabilities, context) question
+    caps = get_decoder("jnp-fused").caps
+    verdict = eligible(caps, ExecContext.PROCESS_POOL)
+    print(f"  jnp-fused in a forked pool? {bool(verdict)} "
+          f"({verdict.reason})")
+
+    # 3. the two protocols (run_path takes registered decoder names)
     names = ["numpy-fast", "numpy-int", "fft-idct", "strict-fast"]
     records = SingleThreadProtocol(corpus, repeats=2).run(names)
     loader = LoaderProtocol(corpus, repeats=1)
     for n in names:
         for w in (0, 2):
-            records.append(loader.run_path(DECODE_PATHS[n], w))
+            records.append(loader.run_path(n, w))
 
     print("\nsingle-thread img/s:")
     for r in records:

@@ -14,8 +14,8 @@ import argparse
 import json
 import threading
 
+from repro.codecs import list_decoders
 from repro.jpeg.corpus import build_corpus, zipf_indices
-from repro.jpeg.paths import list_paths
 from repro.service import DecodeService, ServiceConfig, ServiceOverloaded
 
 
@@ -33,9 +33,9 @@ def main():
 
     cfg = ServiceConfig(num_workers=args.workers, max_batch=8,
                         max_wait_ms=2.0, policy=args.policy)
-    # every registered path is an arm; strict paths fall back on the rare
-    # YCCK image instead of failing the request
-    svc = DecodeService(cfg, paths=list_paths())
+    # every registered decoder is an arm; strict paths fall back on the
+    # rare YCCK image instead of failing the request
+    svc = DecodeService(cfg, paths=list_decoders())
 
     def client(cid: str, seed: int):
         served = shed = 0

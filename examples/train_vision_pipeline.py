@@ -18,10 +18,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.codecs import get_decoder
 from repro.data.autotune import autotune_workers
 from repro.data.loader import DataLoader, LoaderConfig
 from repro.jpeg.corpus import build_corpus
-from repro.jpeg.paths import DECODE_PATHS
 from repro.models import vision
 from repro.models.layers import ModelContext
 from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update
@@ -46,7 +46,7 @@ def main():
                                num_classes=10)
 
     corpus = build_corpus(args.corpus, seed=5, num_classes=cfg.num_classes)
-    decode = DECODE_PATHS[args.decoder].decode
+    decode = get_decoder(args.decoder).fn
 
     # 1. autotune the worker count on THIS machine (paper §4.3: worker
     # policy is CPU-generation-specific; never hardcode it).

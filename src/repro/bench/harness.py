@@ -34,7 +34,6 @@ from repro.core import decision, report
 from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
 from repro.core.schema import RunRecord, save_records, validate_record
 from repro.jpeg.corpus import build_corpus
-from repro.jpeg.paths import DECODE_PATHS
 
 DEFAULT_OUT = os.path.join("artifacts", "bench")
 
@@ -115,9 +114,9 @@ class _SweepContext:
 
 def _run_scenario(s: Scenario, ctx: _SweepContext) -> RunRecord:
     if s.kind == KIND_SINGLE:
-        return ctx.single.run_path(DECODE_PATHS[s.path])
+        return ctx.single.run_path(s.path)
     if s.kind == KIND_LOADER:
-        return ctx.loader(s.mode).run_path(DECODE_PATHS[s.path], s.workers)
+        return ctx.loader(s.mode).run_path(s.path, s.workers)
     if s.kind == KIND_BATCHED:
         r = service_load.batched_vs_serial(
             ctx.corpus, n_requests=ctx.profile.batched_requests,
@@ -184,13 +183,10 @@ def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
         t0 = time.perf_counter()
         try:
             rec = _run_scenario(s, ctx)
-            if rec.meta.get("eligible", True):
-                rec.meta.setdefault("status", "ok")
-            else:
-                # ineligible cells (e.g. jax paths x process pool) are
-                # never measured: account them as skips, not 0-img/s oks
-                rec.meta["status"] = "skipped"
-                rec.meta.setdefault("reason", "not eligible")
+            # ineligible cells (e.g. jax paths x process pool) already
+            # arrive as schema "skipped" records from the protocols —
+            # everything else measured is ok
+            rec.meta.setdefault("status", "ok")
             rec.meta["scenario"] = s.name
             rec.meta["elapsed_s"] = round(time.perf_counter() - t0, 3)
         except Exception as e:                 # noqa: BLE001 — isolate cell

@@ -1,20 +1,23 @@
 """The scenario registry: the paper's protocol matrix as enumerable data.
 
-Every registered decode path crosses every evaluation protocol the paper
-names — single-thread, DataLoader-shaped worker sweep {0,2,4,8} x
-{thread, process} pool modes, batched decode, and the online service's
-closed/open-loop load models. A *profile* (smoke / quick / full) selects
-which cells actually execute; cells a profile leaves out are still
-emitted as explicitly-skipped records, so every record set answers "was
-this scenario measured, skipped, or broken?" for the full matrix — the
-accounting discipline the paper argues ad-hoc benchmarks lack.
+Every decoder in the ``repro.codecs`` registry crosses every evaluation
+protocol the paper names — single-thread, DataLoader-shaped worker sweep
+{0,2,4,8} x {thread, process} pool modes, batched decode, and the online
+service's closed/open-loop load models. The matrix is rebuilt from the
+live registry on every call, so a decoder plugged in via
+``@register_decoder`` gets its cells with no edit here. A *profile*
+(smoke / quick / full) selects which cells actually execute; cells a
+profile leaves out are still emitted as explicitly-skipped records, so
+every record set answers "was this scenario measured, skipped, or
+broken?" for the full matrix — the accounting discipline the paper
+argues ad-hoc benchmarks lack.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, FrozenSet, List, Optional, Tuple
 
-from repro.jpeg.paths import DECODE_PATHS
+from repro.codecs import decoder_names, list_decoders
 
 WORKER_SWEEP = (0, 2, 4, 8)
 POOL_MODES = ("thread", "process")
@@ -38,11 +41,14 @@ class Scenario:
 
 
 def build_registry() -> List[Scenario]:
-    """The full matrix, in deterministic emission order."""
+    """The full matrix over the live decoder registry, in deterministic
+    emission order (decoder registration order)."""
+    names = decoder_names()
+    batchable = {s.name for s in list_decoders(batchable=True)}
     out: List[Scenario] = []
-    for p in DECODE_PATHS:
+    for p in names:
         out.append(Scenario(f"single/{p}", KIND_SINGLE, path=p))
-    for p in DECODE_PATHS:
+    for p in names:
         for w in WORKER_SWEEP:
             # w=0 decodes inline in the consumer; pool mode is moot, so
             # the matrix has one w0 cell per path (thread label).
@@ -50,8 +56,8 @@ def build_registry() -> List[Scenario]:
             for m in modes:
                 out.append(Scenario(f"loader/{p}/w{w}/{m}", KIND_LOADER,
                                     path=p, workers=w, mode=m))
-    for p, path in DECODE_PATHS.items():
-        if path.batch_fn is not None:
+    for p in names:
+        if p in batchable:
             out.append(Scenario(f"batched/{p}", KIND_BATCHED, path=p))
     for w in WORKER_SWEEP:
         out.append(Scenario(f"service/closed/w{w}", KIND_SERVICE_CLOSED,
@@ -71,7 +77,9 @@ def scenario_names() -> List[str]:
 class Profile:
     """Execution budget for a sweep: corpus size, repeat counts, and the
     subset of matrix cells that actually run (the rest are emitted as
-    explicit skips)."""
+    explicit skips). A selection set of ``None`` means *every* cell of
+    that kind — the full profile stays open so plugin decoders registered
+    after import are swept too."""
     name: str
     corpus_n: int
     corpus_seed: int
@@ -79,9 +87,9 @@ class Profile:
     loader_repeats: int
     service_requests: int
     batched_requests: int
-    single_paths: FrozenSet[str]
-    loader_cells: FrozenSet[Tuple[str, int, str]]
-    batched_paths: FrozenSet[str]
+    single_paths: Optional[FrozenSet[str]]
+    loader_cells: Optional[FrozenSet[Tuple[str, int, str]]]
+    batched_paths: Optional[FrozenSet[str]]
     service_closed: FrozenSet[int]
     service_open: FrozenSet[int]
     budget_s: float                # advisory wall-clock target
@@ -89,13 +97,14 @@ class Profile:
     def wants(self, s: Scenario) -> Tuple[bool, str]:
         """(run?, reason-if-skipped) for one scenario under this profile."""
         if s.kind == KIND_SINGLE:
-            if s.path in self.single_paths:
+            if self.single_paths is None or s.path in self.single_paths:
                 return True, ""
         elif s.kind == KIND_LOADER:
-            if (s.path, s.workers, s.mode) in self.loader_cells:
+            if self.loader_cells is None or \
+                    (s.path, s.workers, s.mode) in self.loader_cells:
                 return True, ""
         elif s.kind == KIND_BATCHED:
-            if s.path in self.batched_paths:
+            if self.batched_paths is None or s.path in self.batched_paths:
                 return True, ""
         elif s.kind == KIND_SERVICE_CLOSED:
             if s.workers in self.service_closed:
@@ -109,9 +118,9 @@ class Profile:
 def _paths(*, engines: Optional[Tuple[str, ...]] = None,
            exclude: Tuple[str, ...] = ()) -> FrozenSet[str]:
     return frozenset(
-        p.name for p in DECODE_PATHS.values()
-        if (engines is None or p.engine in engines)
-        and p.name not in exclude)
+        s.name for s in list_decoders()
+        if (engines is None or s.caps.engine in engines)
+        and s.name not in exclude)
 
 
 def _cells(paths, workers, modes) -> FrozenSet[Tuple[str, int, str]]:
@@ -128,9 +137,12 @@ _QUICK_SINGLE = _paths(engines=("numpy", "jnp"),
                        exclude=("jnp-basic", "jnp-batched"))
 
 PROFILES: Dict[str, Profile] = {
+    # loader_repeats=2: with the compare step a HARD gate, one-sample
+    # loader cells would make the committed baseline a single-draw
+    # lottery on shared runners; two samples feed the 2-sigma noise gate.
     "smoke": Profile(
         name="smoke", corpus_n=8, corpus_seed=42,
-        st_repeats=2, loader_repeats=1,
+        st_repeats=2, loader_repeats=2,
         service_requests=16, batched_requests=24,
         single_paths=_SMOKE_SINGLE,
         loader_cells=_cells(("numpy-fast", "jnp-fused"), (0, 2),
@@ -156,11 +168,9 @@ PROFILES: Dict[str, Profile] = {
         name="full", corpus_n=200, corpus_seed=42,
         st_repeats=3, loader_repeats=2,
         service_requests=512, batched_requests=192,
-        single_paths=frozenset(DECODE_PATHS),
-        loader_cells=_cells(DECODE_PATHS, WORKER_SWEEP, POOL_MODES),
-        batched_paths=frozenset(
-            p.name for p in DECODE_PATHS.values()
-            if p.batch_fn is not None),
+        single_paths=None,             # every registered decoder
+        loader_cells=None,
+        batched_paths=None,
         service_closed=frozenset(WORKER_SWEEP),
         service_open=frozenset(WORKER_SWEEP[1:]),
         budget_s=7200.0),

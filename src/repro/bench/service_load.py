@@ -22,8 +22,8 @@ import threading
 import time
 from typing import List
 
+from repro.codecs import ExecContext, list_decoders, open_decoder
 from repro.jpeg.corpus import Corpus, zipf_indices
-from repro.jpeg.paths import DECODE_PATHS, list_paths
 from repro.service import DecodeService, ServiceConfig, ServiceOverloaded
 
 BASELINE_PATH = "numpy-fast"
@@ -36,20 +36,25 @@ def request_stream(corpus: Corpus, n_requests: int, seed: int) -> List[bytes]:
 
 def serial_baseline(stream: List[bytes],
                     path_name: str = BASELINE_PATH) -> float:
-    decode = DECODE_PATHS[path_name].decode
-    decode(stream[0])                       # warm
-    t0 = time.perf_counter()
-    for data in stream:
-        decode(data)
-    return len(stream) / (time.perf_counter() - t0)
+    with open_decoder(path_name) as dec:    # INLINE: the paper's protocol
+        dec.warmup(stream[:1])
+        t0 = time.perf_counter()
+        for data in stream:
+            # unwrap: a refused/corrupt item must fail the baseline loudly,
+            # not inflate it with images that were never decoded
+            dec.decode(data).unwrap()
+        return len(stream) / (time.perf_counter() - t0)
 
 
 def make_service(workers: int, seed: int = 0,
                  max_inflight: int = 64) -> DecodeService:
     cfg = ServiceConfig(num_workers=workers, max_inflight=max_inflight,
                         max_batch=8, max_wait_ms=2.0, seed=seed)
-    return DecodeService(cfg, paths=list_paths(process_eligible=True,
-                                               strict=False))
+    # CI-cheap arm set: the fork-safe (numpy) non-strict decoders — the
+    # PROCESS_POOL context filter is the resolver-backed spelling of the
+    # old list_paths(process_eligible=True)
+    return DecodeService(cfg, paths=list_decoders(
+        context=ExecContext.PROCESS_POOL, strict=False))
 
 
 def closed_loop(stream: List[bytes], workers: int,
@@ -113,30 +118,27 @@ def batched_vs_serial(corpus: Corpus, n_requests: int = 48, seed: int = 3,
     path one image at a time. Same entropy-decode work on both sides — the
     delta is transform launch count, i.e. exactly what micro-batching buys
     once batches decode as real batches."""
-    from repro.service.batcher import bucket_key
-
-    path = DECODE_PATHS[path_name]
     stream = request_stream(corpus, n_requests, seed)
-    buckets: dict = {}
-    for data in stream:
-        buckets.setdefault(bucket_key(data), []).append(data)
-    for items in buckets.values():          # warm compile caches both ways
-        path.decode_batch(items)
-        for data in items:                  # every B=1 grid compiles too:
-            path.decode(data)               # the timed loops must be warm
+    with open_decoder(path_name) as dec:
+        buckets: dict = {}
+        for data in stream:
+            buckets.setdefault(dec.probe(data), []).append(data)
+        for items in buckets.values():      # warm compile caches both ways
+            dec.decode_batch(items)
+            for data in items:              # every B=1 grid compiles too:
+                dec.decode(data)            # the timed loops must be warm
 
-    t0 = time.perf_counter()
-    n_batched = 0
-    for items in buckets.values():
-        n_batched += sum(1 for r in path.decode_batch(items)
-                         if not isinstance(r, BaseException))
-    t_batched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        n_batched = 0
+        for items in buckets.values():
+            n_batched += sum(out.ok for out in dec.decode_batch(items))
+        t_batched = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    for items in buckets.values():
-        for data in items:
-            path.decode(data)
-    t_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for items in buckets.values():
+            for data in items:
+                dec.decode(data)
+        t_serial = time.perf_counter() - t0
 
     assert n_batched == len(stream), (n_batched, len(stream))
     return {"path": path_name, "n_requests": len(stream),

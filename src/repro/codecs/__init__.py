@@ -1,0 +1,37 @@
+"""Capability-typed decoder API (see DESIGN.md §6).
+
+The decode surface in three layers:
+
+* **capabilities** — ``Capabilities`` (what a decoder is), ``ExecContext``
+  (where it runs), and ``eligible(caps, context)``: the single resolver
+  that owns every eligibility rule.
+* **registry** — ``@register_decoder`` / ``register_decoder(...)`` plug
+  new decoders into the full protocol matrix (bench cells, loader,
+  service router arms) with no other file changing; ``get_decoder`` /
+  ``list_decoders`` / ``decoder_names`` query it.
+* **sessions** — ``open_decoder(name, context=...)`` returns a
+  ``Decoder`` with ``decode``/``decode_batch`` (typed ``DecodeOutcome``s:
+  image | skip | error), ``probe`` (headers-only bucket key), ``warmup``,
+  ``close``, and context-manager support.
+
+``repro.jpeg.paths`` registers the sixteen built-in decode paths here
+and keeps ``DECODE_PATHS``/``get_path``/``list_paths`` as deprecation
+shims over this registry for one release.
+"""
+from repro.codecs.capabilities import (Capabilities, Eligibility,
+                                       ExecContext, eligible)
+from repro.codecs.outcome import DecodeOutcome, outcome_of
+from repro.codecs.probe import BucketKey, probe_key
+from repro.codecs.registry import (DecoderSpec, as_spec, decoder_names,
+                                   get_decoder, list_decoders,
+                                   register_decoder, unregister_decoder)
+from repro.codecs.session import Decoder, IneligibleDecoder, open_decoder
+
+__all__ = [
+    "Capabilities", "Eligibility", "ExecContext", "eligible",
+    "DecodeOutcome", "outcome_of",
+    "BucketKey", "probe_key",
+    "DecoderSpec", "as_spec", "decoder_names", "get_decoder",
+    "list_decoders", "register_decoder", "unregister_decoder",
+    "Decoder", "IneligibleDecoder", "open_decoder",
+]

@@ -1,0 +1,101 @@
+"""Capability typing and the single eligibility resolver.
+
+The paper's core claim is that decoder *eligibility and rank are
+properties of the deployment context*, not of the decoder alone. This
+module gives that claim a type system:
+
+* ``Capabilities`` — what a decoder **is** (transform engine, strictness
+  policy, fork-safety, batch support, headers-only probing). Declared
+  once at registration, immutable afterwards.
+* ``ExecContext`` — where a decoder **runs** (inline tight loop, thread
+  pool, forked process pool, online service).
+* ``eligible(caps, context)`` — the one function that owns every
+  eligibility rule. Before this existed the fork-safety rule was
+  re-checked by hand in four modules (``data/loader.py``,
+  ``core/protocols.py``, ``service/router.py``, ``bench/registry.py``);
+  now a rule change is one edit and every harness inherits it.
+
+The current rule set (see DESIGN.md §6):
+
+* ``PROCESS_POOL`` requires ``fork_safe``. The jax runtime does not
+  survive ``fork()`` — XLA thread pools, backend handles, and compile
+  caches land in a child that never re-initialized them — so only pure
+  numpy/CPython decoders may run under forked workers. This is the
+  repo's analogue of the paper's "PyVips is not loader-eligible under
+  this forked harness".
+* ``INLINE``, ``THREAD_POOL``, and ``SERVICE`` admit every decoder:
+  numpy and jitted jax decode release the GIL, so in-process contexts
+  carry no fork hazard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class ExecContext(enum.Enum):
+    """Where a decoder session executes — the paper's deployment axis."""
+
+    INLINE = "inline"            # tight loop in the caller (single-thread
+                                 # protocol, w=0 loader, w=0 service)
+    THREAD_POOL = "thread_pool"  # in-process worker threads (GIL-releasing)
+    PROCESS_POOL = "process_pool"  # forked/spawned worker processes
+    SERVICE = "service"          # the online micro-batching engine
+
+    def __str__(self) -> str:  # readable in skip reasons and error messages
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a decoder declares about itself at registration time.
+
+    ``fork_safe`` left unset derives from the engine (DESIGN.md §6 rule:
+    only pure-numpy decoders touch no jax runtime state) — so an explicit
+    ``Capabilities(engine="jnp")`` is fork-UNsafe by default rather than
+    silently process-pool eligible; pass ``fork_safe=True`` to override.
+    """
+
+    engine: str = "numpy"            # transform engine: numpy | jnp | pallas
+    strict: bool = False             # refuses rare JPEG modes (skip policy)
+    fork_safe: Optional[bool] = None  # survives fork/spawn pool workers
+                                      # (None: derived from engine)
+    batchable: bool = False          # has a true batched decode (one fused
+                                     # launch per same-structure group)
+    headers_only_probe: bool = True  # bucket key derivable without the
+                                     # O(file-size) entropy scan
+
+    def __post_init__(self):
+        if self.fork_safe is None:
+            object.__setattr__(self, "fork_safe", self.engine == "numpy")
+
+
+@dataclasses.dataclass(frozen=True)
+class Eligibility:
+    """Resolver verdict: truthy iff eligible; ``reason`` explains a veto
+    in the words that end up in skip records and error messages."""
+
+    eligible: bool
+    reason: str = ""
+
+    def __bool__(self) -> bool:
+        return self.eligible
+
+
+def eligible(caps: Capabilities, context: ExecContext) -> Eligibility:
+    """THE eligibility rule — every harness asks here, nobody re-derives.
+
+    Returns a truthy ``Eligibility`` or a falsy one whose ``reason`` is
+    the canonical explanation (it is stored verbatim in skipped bench
+    records and raised in loader errors).
+    """
+    if not isinstance(context, ExecContext):
+        raise TypeError(f"context must be an ExecContext, got {context!r}")
+    if context is ExecContext.PROCESS_POOL and not caps.fork_safe:
+        return Eligibility(
+            False,
+            f"not process-loader eligible: engine {caps.engine!r} is not "
+            "fork-safe (jax runtime state does not survive forked workers; "
+            "see DESIGN.md §6)")
+    return Eligibility(True)

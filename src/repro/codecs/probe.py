@@ -1,0 +1,34 @@
+"""Headers-only probe: the bucket identity of a JPEG without the scan.
+
+``probe_key`` parses *headers only* (``parser.parse(headers_only=True)``
+stops at SOS), so deriving a bucket key costs O(header bytes), never the
+O(file-size) entropy-stream scan — the property the ``Capabilities``
+flag ``headers_only_probe`` declares. The key is the padded MCU grid
+plus sampling structure: exactly the coefficient-array shapes, i.e. the
+jit compile-cache identity of the jnp/Pallas decode paths. Grid dims
+round up to ``granularity`` MCUs so near-identical resolutions share a
+bucket.
+
+The service micro-batcher's ``bucket_key`` delegates here; decoder
+sessions expose it as ``Decoder.probe``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.jpeg import parser as P
+
+BucketKey = Tuple[int, int, int, Tuple[Tuple[int, int], ...]]
+
+
+def _ceil_to(x: int, g: int) -> int:
+    return ((x + g - 1) // g) * g
+
+
+def probe_key(data: bytes, granularity: int = 4) -> BucketKey:
+    spec = P.parse(data, headers_only=True)
+    mcu_rows = -(-spec.height // spec.mcu_h)
+    mcu_cols = -(-spec.width // spec.mcu_w)
+    sampling = tuple((c.h, c.v) for c in spec.components)
+    return (_ceil_to(mcu_rows, granularity), _ceil_to(mcu_cols, granularity),
+            len(spec.components), sampling)

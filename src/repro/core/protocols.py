@@ -9,6 +9,12 @@ and skip accounting.
 
 ``WorkerSweep`` — LoaderProtocol over worker counts {0,2,4,8}.
 
+Decoders come from the ``repro.codecs`` registry (``run_path`` accepts a
+registered name, a ``DecoderSpec``, or a legacy path object); eligibility
+of a (decoder, context) pairing is decided exclusively by the
+``codecs.eligible`` resolver — an ineligible cell emits a schema-v2
+``status="skipped"`` record, never a fake 0.0-img/s sample.
+
 All protocols emit schema.RunRecord JSON; analysis (rank moves, Spearman,
 tiers) runs downstream on records only — identical for live and recorded
 (paper) data.
@@ -16,18 +22,21 @@ tiers) runs downstream on records only — identical for live and recorded
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Set
 
 import numpy as np
 
+from repro.codecs import ExecContext, as_spec, decoder_names, eligible, \
+    open_decoder
 from repro.core.schema import RunRecord
 from repro.data.loader import DataLoader, LoaderConfig
 from repro.jpeg.corpus import Corpus
-from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
-from repro.jpeg.paths import DECODE_PATHS, DecodePath
 
 
 def _thr_samples(fn, n_items: int, repeats: int) -> List[float]:
+    """Timed passes with a fixed per-pass item count (loader protocol:
+    every pass offers the whole corpus). The single-thread protocol
+    deliberately does NOT use this — it counts per-pass delivery."""
     out = []
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -35,6 +44,13 @@ def _thr_samples(fn, n_items: int, repeats: int) -> List[float]:
         dt = time.perf_counter() - t0
         out.append(n_items / dt if dt > 0 else 0.0)
     return out
+
+
+def _loader_context(mode: str, workers: int) -> ExecContext:
+    if workers == 0:
+        return ExecContext.INLINE
+    return (ExecContext.PROCESS_POOL if mode == "process"
+            else ExecContext.THREAD_POOL)
 
 
 class SingleThreadProtocol:
@@ -45,35 +61,48 @@ class SingleThreadProtocol:
         self.warmup = warmup
         self.platform = platform
 
-    def run_path(self, path: DecodePath) -> RunRecord:
+    def run_path(self, path) -> RunRecord:
+        spec = as_spec(path)
         files = self.corpus.files
-        skips: List[int] = []
+        skips: Set[int] = set()
 
-        def one_pass():
-            for i, f in enumerate(files):
-                try:
-                    path.decode(f)
-                except (UnsupportedJpeg, CorruptJpeg):
-                    if i not in skips:
-                        skips.append(i)
+        with open_decoder(spec, context=ExecContext.INLINE) as dec:
+            def one_pass() -> int:
+                delivered = 0
+                for i, f in enumerate(files):
+                    if dec.decode(f).ok:
+                        delivered += 1
+                    else:
+                        skips.add(i)
+                return delivered
 
-        if self.warmup:
-            one_pass()          # jit-cache warm (paper: steady-state decode)
-        samples = _thr_samples(one_pass, len(files) - len(skips),
-                               self.repeats)
+            if self.warmup:
+                one_pass()      # jit-cache warm (paper: steady-state decode)
+            samples: List[float] = []
+            delivered = 0
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                # throughput counts what THIS pass delivered: without a
+                # warmup pass the old len(files) - len(skips) was computed
+                # before any skip was discovered, overstating strict paths
+                # on the first timed pass
+                delivered = one_pass()
+                dt = time.perf_counter() - t0
+                samples.append(delivered / dt if dt > 0 else 0.0)
         return RunRecord(
-            platform=self.platform, decoder=path.name,
+            platform=self.platform, decoder=spec.name,
             protocol="single_thread", workers=0, mode="",
             throughput_mean=float(np.mean(samples)),
             throughput_std=float(np.std(samples, ddof=1))
             if len(samples) > 1 else 0.0,
             samples=samples, num_images=len(files),
             skip_indices=sorted(skips),
-            meta={"engine": path.engine, "strict": path.strict})
+            meta={"engine": spec.caps.engine, "strict": spec.caps.strict,
+                  "delivered": delivered})
 
     def run(self, paths: Optional[Sequence[str]] = None) -> List[RunRecord]:
-        names = paths or list(DECODE_PATHS)
-        return [self.run_path(DECODE_PATHS[n]) for n in names]
+        names = paths or decoder_names()
+        return [self.run_path(n) for n in names]
 
 
 class LoaderProtocol:
@@ -87,28 +116,34 @@ class LoaderProtocol:
         self.platform = platform
         self.warmup = warmup
 
-    def _loader(self, path: DecodePath, workers: int) -> DataLoader:
+    def _loader(self, spec, workers: int) -> DataLoader:
         cfg = LoaderConfig(batch_size=self.batch_size, num_workers=workers,
                            mode=self.mode)
         return DataLoader(self.corpus.files, self.corpus.labels,
-                          path.decode, cfg, path_name=path.name)
+                          spec.fn, cfg, path_name=spec.name,
+                          batch_decode_fn=spec.decode_batch)
 
-    def run_path(self, path: DecodePath, workers: int) -> RunRecord:
-        if self.mode == "process" and workers > 0 \
-                and not path.process_eligible:
+    def run_path(self, path, workers: int) -> RunRecord:
+        spec = as_spec(path)
+        verdict = eligible(spec.caps, _loader_context(self.mode, workers))
+        if not verdict:
+            # the schema-v2 skip envelope: aggregators filter on status
+            # and never see a fake 0.0-img/s sample for this cell
             return RunRecord(
-                platform=self.platform, decoder=path.name,
+                platform=self.platform, decoder=spec.name,
                 protocol="dataloader", workers=workers, mode=self.mode,
                 throughput_mean=0.0, throughput_std=0.0, samples=[],
                 num_images=len(self.corpus.files),
-                meta={"eligible": False,
-                      "reason": "not process-loader eligible"})
+                meta={"status": "skipped", "eligible": False,
+                      "reason": verdict.reason,
+                      "engine": spec.caps.engine,
+                      "strict": spec.caps.strict})
         if self.warmup:
-            for _ in self._loader(path, 0):
+            for _ in self._loader(spec, 0):
                 pass
 
         def one_pass():
-            loader = self._loader(path, workers)
+            loader = self._loader(spec, workers)
             n = 0
             for batch in loader:
                 n += batch["image"].shape[0]
@@ -117,16 +152,17 @@ class LoaderProtocol:
             one_pass.loader_stats = loader.stats()
 
         one_pass()
-        samples = _thr_samples(one_pass, len(self.corpus.files), self.repeats)
+        samples = _thr_samples(one_pass, len(self.corpus.files),
+                               self.repeats)
         return RunRecord(
-            platform=self.platform, decoder=path.name,
+            platform=self.platform, decoder=spec.name,
             protocol="dataloader", workers=workers, mode=self.mode,
             throughput_mean=float(np.mean(samples)),
             throughput_std=float(np.std(samples, ddof=1))
             if len(samples) > 1 else 0.0,
             samples=samples, num_images=len(self.corpus.files),
             skip_indices=one_pass.skips,
-            meta={"engine": path.engine, "strict": path.strict,
+            meta={"engine": spec.caps.engine, "strict": spec.caps.strict,
                   "eligible": True, "delivered": one_pass.n,
                   "loader": one_pass.loader_stats})
 
@@ -139,9 +175,9 @@ class WorkerSweep:
 
     def run(self, paths: Optional[Sequence[str]] = None,
             workers: Sequence[int] = WORKERS) -> List[RunRecord]:
-        names = paths or list(DECODE_PATHS)
+        names = paths or decoder_names()
         out = []
         for n in names:
             for w in workers:
-                out.append(self.loader.run_path(DECODE_PATHS[n], w))
+                out.append(self.loader.run_path(n, w))
         return out

@@ -6,10 +6,11 @@ consumer; N = parallel workers) with two pool modes:
 * ``thread``  — the JAX/grain-idiomatic choice: numpy and jitted decode
   release the GIL, so thread workers scale without fork hazards. All decode
   paths are thread-eligible.
-* ``process`` — the paper's fork-based harness semantics. Only
-  ``process_eligible`` decode paths run here (numpy family); jax-backed
-  paths are excluded, the analogue of "PyVips is not loader-eligible under
-  this forked harness".
+* ``process`` — the paper's fork-based harness semantics. Only decoders
+  the ``repro.codecs.eligible`` resolver admits for
+  ``ExecContext.PROCESS_POOL`` (fork-safe, i.e. the numpy family) run
+  here; jax-backed paths are excluded, the analogue of "PyVips is not
+  loader-eligible under this forked harness".
 
 Production features exercised by tests:
   * bounded prefetch (backpressure), ordered delivery
@@ -100,9 +101,9 @@ _PROC_DECODE: Optional[Callable] = None
 
 def _proc_init(files, path_name):
     global _PROC_FILES, _PROC_DECODE
-    from repro.jpeg.paths import get_path
+    from repro.codecs import get_decoder
     _PROC_FILES = files
-    _PROC_DECODE = get_path(path_name).decode
+    _PROC_DECODE = get_decoder(path_name).fn
 
 
 def _proc_work(i):
@@ -116,18 +117,27 @@ class DataLoader:
     """Iterable over batches: dict(image [B,H,W,3] u8, label [B] i32)."""
 
     def __init__(self, files: Sequence[bytes], labels: Sequence[int],
-                 decode_fn: Callable[[bytes], np.ndarray],
-                 cfg: LoaderConfig, *, path_name: Optional[str] = None,
+                 decode_fn: Optional[Callable[[bytes], np.ndarray]] = None,
+                 cfg: Optional[LoaderConfig] = None, *,
+                 path_name: Optional[str] = None,
                  batch_decode_fn: Optional[Callable] = None):
         self.files = files
         self.labels = np.asarray(labels, np.int32)
-        self.decode_fn = decode_fn
-        self.cfg = cfg
+        self.cfg = cfg or LoaderConfig()
         self.path_name = path_name
+        self.decode_fn = decode_fn
         self.batch_decode_fn = batch_decode_fn
-        if self.batch_decode_fn is None and path_name is not None:
-            from repro.jpeg.paths import get_path
-            self.batch_decode_fn = get_path(path_name).decode_batch
+        if (decode_fn is None or batch_decode_fn is None) \
+                and path_name is not None:
+            from repro.codecs import get_decoder
+            spec = get_decoder(path_name)
+            if self.decode_fn is None:
+                self.decode_fn = spec.fn
+            if self.batch_decode_fn is None:
+                self.batch_decode_fn = spec.decode_batch
+        if self.decode_fn is None:
+            raise ValueError("DataLoader needs decode_fn or a registered "
+                             "path_name")
         self.ledger = SkipLedger()
         self.epoch = 0
         self.cursor = 0
@@ -309,11 +319,13 @@ class DataLoader:
         import multiprocessing as mp
         assert self.path_name is not None, \
             "process mode needs a registered path name"
-        from repro.jpeg.paths import get_path
-        if not get_path(self.path_name).process_eligible:
+        from repro.codecs import ExecContext, eligible, get_decoder
+        verdict = eligible(get_decoder(self.path_name).caps,
+                           ExecContext.PROCESS_POOL)
+        if not verdict:
             raise RuntimeError(
-                f"decode path {self.path_name!r} is not process-loader "
-                "eligible (jax-backed paths are thread-only; see DESIGN.md)")
+                f"decode path {self.path_name!r} is "
+                f"{verdict.reason}")
         ctx = mp.get_context("fork")
         with ctx.Pool(self.cfg.num_workers, initializer=_proc_init,
                       initargs=(list(self.files), self.path_name)) as pool:

@@ -1,1 +1,14 @@
-from repro.jpeg.paths import DECODE_PATHS, get_path, UnsupportedJpeg
+"""JPEG codec substrate. ``UnsupportedJpeg`` re-exports eagerly; the
+legacy ``DECODE_PATHS``/``get_path`` shims resolve lazily (PEP 562) so
+importing this package never drags in the decode-path registrations —
+which would cycle with ``repro.codecs``, the registry they live in."""
+from repro.jpeg.parser import UnsupportedJpeg
+
+__all__ = ["DECODE_PATHS", "get_path", "UnsupportedJpeg"]
+
+
+def __getattr__(name):
+    if name in ("DECODE_PATHS", "get_path"):
+        from repro.jpeg import paths
+        return getattr(paths, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,5 +1,13 @@
-"""The sixteen decode paths (the paper's thirteen decoder analogues plus
-one beyond-paper optimization plus the two true-batched serving paths).
+"""The sixteen built-in decode paths, registered into ``repro.codecs``.
+
+This module is now the *registration site* of the decode surface — the
+capability/context API itself lives in ``repro.codecs`` (typed
+``Capabilities``, the ``eligible(caps, context)`` resolver, decoder
+sessions via ``open_decoder``, and the ``@register_decoder`` plugin
+registry). ``DECODE_PATHS`` / ``get_path`` / ``list_paths`` remain below
+as thin **deprecation shims** over the registry for one release; new
+code should use ``repro.codecs`` directly (migration map in DESIGN.md
+§6).
 
 Every path is bytes -> RGB uint8 [H, W, 3] over the same codec substrate,
 differing in transform engine (numpy / jnp / Pallas), fusion/jit level,
@@ -25,60 +33,35 @@ paper's evaluation surface:
   strict-fast     numpy     numpy-fast + strict policy              yes
   strict-pallas   pallas    pallas-idct + strict policy             yes
 
-Batched decode: every path answers ``decode_batch(list[bytes])`` (default:
-serial loop). Paths with a ``batch_fn`` — ``jnp-fused``/``jnp-batched``/
-``jnp-batch`` and ``pallas-fused``/``pallas-batch`` — decode a micro-batch
-with one fused transform launch per same-structure group: entropy decode
-stays serial on the host (bit-serial by nature), the post-entropy stages
-run as a real [B, ...] batch. Restart-interval (DRI/RSTn) JPEGs are
-handled by the shared entropy decoder, so every path inherits them.
-
-Process-pool loader eligibility: jax/pallas-backed paths are thread-loader
-only (jax runtime does not survive fork/spawn workers cheaply) — the
-analogue of the paper's "PyVips is not loader-eligible under this forked
-harness".
+Capabilities: paths with a ``batch_fn`` (``jnp-fused``/``jnp-batched``/
+``jnp-batch`` and ``pallas-fused``/``pallas-batch``) register
+``batchable=True`` — a micro-batch runs ONE fused transform launch per
+same-structure group (entropy decode stays serial on the host, being
+bit-serial by nature). ``fork_safe`` follows the DESIGN.md §6 rule: only
+pure-numpy paths survive forked process-pool workers (the analogue of
+the paper's "PyVips is not loader-eligible under this forked harness");
+the ``eligible`` resolver in ``repro.codecs`` is the only place that
+rule is enforced. Restart-interval (DRI/RSTn) JPEGs are handled by the
+shared entropy decoder, so every path inherits them.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import warnings
+from collections.abc import Mapping
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.codecs import (Capabilities, DecoderSpec, ExecContext, as_spec,
+                          eligible, get_decoder, decoder_names,
+                          list_decoders, register_decoder)
 from repro.jpeg import huffman, pipeline
 from repro.jpeg import parser as P
 from repro.jpeg.parser import UnsupportedJpeg
 
-
-@dataclasses.dataclass(frozen=True)
-class DecodePath:
-    name: str
-    fn: Callable[[bytes], np.ndarray]
-    strict: bool = False
-    process_eligible: bool = True     # usable in process-pool workers
-    engine: str = "numpy"             # numpy | jnp | pallas
-    description: str = ""
-    batch_fn: Optional[Callable[[List[bytes]], List]] = None
-
-    def decode(self, data: bytes) -> np.ndarray:
-        return self.fn(data)
-
-    def decode_batch(self, datas: List[bytes]) -> List:
-        """Decode a micro-batch; returns an index-aligned list whose
-        entries are RGB arrays or the per-item exception (UnsupportedJpeg
-        refusals and CorruptJpeg failures never poison batch-mates).
-
-        Paths without a ``batch_fn`` fall back to a serial loop, so the
-        service engine can treat every path uniformly."""
-        if self.batch_fn is not None:
-            return self.batch_fn(list(datas))
-        out: List = []
-        for d in datas:
-            try:
-                out.append(self.fn(d))
-            except Exception as e:
-                out.append(e)
-        return out
+__all__ = ["DECODE_PATHS", "DecodePath", "get_path", "list_paths",
+           "UnsupportedJpeg"]
 
 
 def _entropy(data: bytes, strict: bool):
@@ -155,25 +138,13 @@ def _fft_idct(data: bytes) -> np.ndarray:
         idx[1::2] = np.arange(n - 1, n // 2 - 1, -1)
         return np.take(v, idx, axis=axis)
 
-    hmax = max(c.h for c in spec.components)
-    vmax = max(c.v for c in spec.components)
     planes = []
     for c in spec.components:
         q = spec.qtables[c.tq].astype(np.float64)
         deq = coef[c.cid] * q[None, None]
         blocks = idct1(idct1(deq, axis=2), axis=3)
-        plane = pipeline.assemble_plane_np(blocks) + 128.0
-        planes.append(pipeline.upsample_np(plane, hmax // c.h, vmax // c.v))
-    hh = min(p.shape[0] for p in planes)
-    ww = min(p.shape[1] for p in planes)
-    planes = [p[:hh, :ww] for p in planes]
-    if len(planes) == 1:
-        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
-    elif len(planes) == 3:
-        rgb = pipeline.ycbcr_to_rgb_np(*planes)
-    else:
-        rgb = pipeline.ycck_to_rgb_np(*planes)
-    return pipeline.finalize_np(rgb, spec.height, spec.width)
+        planes.append(pipeline.assemble_plane_np(blocks) + 128.0)
+    return pipeline.assemble_image(spec, planes)
 
 
 # ------------------------------------------------------------ jnp family
@@ -220,56 +191,36 @@ def _one_of_batch(batch_fn) -> Callable[[bytes], np.ndarray]:
 
 
 # ------------------------------------------------------------ pallas family
+def _ycbcr_kernel(y, cb, cr) -> np.ndarray:
+    from repro.kernels import ops
+    return np.asarray(ops.ycbcr2rgb(y, cb, cr))
+
+
 def _pallas_idct(data: bytes, strict: bool = False) -> np.ndarray:
     from repro.kernels import ops
     spec, coef = _entropy(data, strict)
-    hmax = max(c.h for c in spec.components)
-    vmax = max(c.v for c in spec.components)
     planes = []
     for c in spec.components:
         q = spec.qtables[c.tq].astype(np.float32)
         deq = (coef[c.cid] * q[None, None]).astype(np.float32)
         by, bx = deq.shape[:2]
         blocks = ops.idct8x8(deq.reshape(-1, 64)).reshape(by, bx, 8, 8)
-        plane = pipeline.assemble_plane_np(np.asarray(blocks)) + 128.0
-        planes.append(pipeline.upsample_np(plane, hmax // c.h, vmax // c.v))
-    hh = min(p.shape[0] for p in planes)
-    ww = min(p.shape[1] for p in planes)
-    planes = [p[:hh, :ww] for p in planes]
-    if len(planes) == 1:
-        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
-    elif len(planes) == 3:
-        rgb = pipeline.ycbcr_to_rgb_np(*planes)
-    else:
-        rgb = pipeline.ycck_to_rgb_np(*planes)
-    return pipeline.finalize_np(rgb, spec.height, spec.width)
+        planes.append(pipeline.assemble_plane_np(np.asarray(blocks)) + 128.0)
+    return pipeline.assemble_image(spec, planes)
 
 
 def _pallas_fused(data: bytes) -> np.ndarray:
     from repro.kernels import ops
     spec, coef = _entropy(data, False)
-    hmax = max(c.h for c in spec.components)
-    vmax = max(c.v for c in spec.components)
     planes = []
     for c in spec.components:
         q = spec.qtables[c.tq].astype(np.float32)
         by, bx = coef[c.cid].shape[:2]
         blocks = ops.dequant_idct(
             coef[c.cid].reshape(-1, 64).astype(np.float32), q.reshape(64))
-        plane = pipeline.assemble_plane_np(
-            np.asarray(blocks).reshape(by, bx, 8, 8))
-        planes.append(pipeline.upsample_np(plane, hmax // c.h, vmax // c.v))
-    hh = min(p.shape[0] for p in planes)
-    ww = min(p.shape[1] for p in planes)
-    planes = [p[:hh, :ww] for p in planes]
-    if len(planes) == 3:
-        rgb = np.asarray(ops.ycbcr2rgb(planes[0], planes[1], planes[2]))
-    elif len(planes) == 1:
-        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
-    else:
-        rgb = pipeline.ycck_to_rgb_np(*planes)
-    return pipeline.finalize_np(rgb.astype(np.float64), spec.height,
-                                spec.width)
+        planes.append(pipeline.assemble_plane_np(
+            np.asarray(blocks).reshape(by, bx, 8, 8)))
+    return pipeline.assemble_image(spec, planes, ycbcr_fn=_ycbcr_kernel)
 
 
 def _pallas_transform_group(specs, coefs) -> List[np.ndarray]:
@@ -293,28 +244,15 @@ def _pallas_transform_group(specs, coefs) -> List[np.ndarray]:
         np.concatenate(rows), np.concatenate(ridx), np.stack(qtabs)))
     imgs, pos, si = [], 0, 0
     for spec in specs:
-        hmax = max(c.h for c in spec.components)
-        vmax = max(c.v for c in spec.components)
         planes = []
-        for c in spec.components:
+        for _ in spec.components:
             nr, by, bx = spans[si]
             si += 1
             blocks = pix[pos:pos + nr].reshape(by, bx, 8, 8)
             pos += nr
-            plane = pipeline.assemble_plane_np(blocks)
-            planes.append(pipeline.upsample_np(plane, hmax // c.h,
-                                               vmax // c.v))
-        hh = min(p.shape[0] for p in planes)
-        ww = min(p.shape[1] for p in planes)
-        planes = [p[:hh, :ww] for p in planes]
-        if len(planes) == 3:
-            rgb = np.asarray(ops.ycbcr2rgb(planes[0], planes[1], planes[2]))
-        elif len(planes) == 1:
-            rgb = np.repeat(planes[0][..., None], 3, axis=-1)
-        else:
-            rgb = pipeline.ycck_to_rgb_np(*planes)
-        imgs.append(pipeline.finalize_np(rgb.astype(np.float64),
-                                         spec.height, spec.width))
+            planes.append(pipeline.assemble_plane_np(blocks))
+        imgs.append(pipeline.assemble_image(spec, planes,
+                                            ycbcr_fn=_ycbcr_kernel))
     return imgs
 
 
@@ -333,11 +271,15 @@ def _pallas_decode_batch(datas: List[bytes], strict: bool = False) -> List:
     return out
 
 
-DECODE_PATHS: Dict[str, DecodePath] = {}
-
-
-def _register(name, fn, **kw):
-    DECODE_PATHS[name] = DecodePath(name=name, fn=fn, **kw)
+# ------------------------------------------------------------ registration
+def _register(name, fn, *, engine="numpy", strict=False, batch_fn=None,
+              description=""):
+    register_decoder(
+        name, fn,
+        caps=Capabilities(engine=engine, strict=strict,
+                          fork_safe=(engine == "numpy"),
+                          batchable=batch_fn is not None),
+        batch_fn=batch_fn, description=description)
 
 
 _register("numpy-ref", _numpy_ref, engine="numpy",
@@ -346,39 +288,37 @@ _register("numpy-fast", lambda d: _numpy_fast(d, False), engine="numpy",
           description="Kronecker 64x64 GEMM IDCT")
 _register("numpy-int", _numpy_int, engine="numpy",
           description="13-bit fixed-point IDCT")
-_register("jnp-basic", _jnp_basic, engine="jnp", process_eligible=False,
+_register("jnp-basic", _jnp_basic, engine="jnp",
           description="eager per-stage jnp dispatch")
-_register("jnp-jit", _jnp_jit, engine="jnp", process_eligible=False,
+_register("jnp-jit", _jnp_jit, engine="jnp",
           description="jit, separable IDCT")
 _register("jnp-fused", lambda d: _jnp_fused(d, False), engine="jnp",
-          process_eligible=False, batch_fn=_jnp_decode_batch,
+          batch_fn=_jnp_decode_batch,
           description="jit, fused whole-image transform")
 _register("jnp-batched", lambda d: _jnp_fused(d, False), engine="jnp",
-          process_eligible=False, batch_fn=_jnp_decode_batch,
+          batch_fn=_jnp_decode_batch,
           description="fused + warm compile cache (bucketed shapes)")
 _register("jnp-batch", _one_of_batch(_jnp_decode_batch), engine="jnp",
-          process_eligible=False, batch_fn=_jnp_decode_batch,
+          batch_fn=_jnp_decode_batch,
           description="true batched: one fused launch per bucket")
 _register("fft-idct", _fft_idct, engine="numpy",
           description="IDCT via FFT (skimage-style)")
 _register("pallas-idct", lambda d: _pallas_idct(d, False), engine="pallas",
-          process_eligible=False,
           description="Pallas IDCT kernel (interpret on CPU; MXU on TPU)")
 _register("pallas-fused", _pallas_fused, engine="pallas",
-          process_eligible=False, batch_fn=_pallas_decode_batch,
+          batch_fn=_pallas_decode_batch,
           description="fused Pallas dequant+IDCT + color kernels")
 _register("pallas-batch", _one_of_batch(_pallas_decode_batch),
-          engine="pallas", process_eligible=False,
-          batch_fn=_pallas_decode_batch,
+          engine="pallas", batch_fn=_pallas_decode_batch,
           description="batched Pallas kernel, per-row qtable gather")
 _register("strict-turbo", lambda d: _jnp_fused(d, True), engine="jnp",
-          strict=True, process_eligible=False,
+          strict=True,
           description="jnp-fused + strict JPEG-mode policy")
 _register("strict-fast", lambda d: _numpy_fast(d, True), engine="numpy",
           strict=True,
           description="numpy-fast + strict JPEG-mode policy")
 _register("strict-pallas", lambda d: _pallas_idct(d, True), engine="pallas",
-          strict=True, process_eligible=False,
+          strict=True,
           description="pallas-idct + strict JPEG-mode policy")
 # 14th path — beyond-paper optimization (EXPERIMENTS.md §Perf): DC-shortcut
 # IDCT, GEMM only blocks with AC energy.
@@ -386,24 +326,101 @@ _register("numpy-sparse", _numpy_sparse, engine="numpy",
           description="DC-shortcut sparse IDCT (beyond-paper)")
 
 
+# ------------------------------------------------- deprecation shims (v1)
+# DECODE_PATHS / get_path / list_paths were the pre-codecs front door.
+# They remain for one release as live read-only views over the registry:
+# a decoder registered via repro.codecs shows up here too, and these
+# never diverge from the registry. New code: repro.codecs (DESIGN.md §6).
+@dataclasses.dataclass(frozen=True)
+class DecodePath:
+    """Deprecated adapter over ``repro.codecs.DecoderSpec`` (same duck
+    type: ``decode``/``decode_batch`` raw conventions plus the legacy
+    ``process_eligible`` flag). Constructible directly for ad-hoc test
+    decoders; ``repro.codecs.as_spec`` lifts it into the new API."""
+
+    name: str
+    fn: Callable[[bytes], np.ndarray]
+    strict: bool = False
+    process_eligible: bool = True     # legacy alias of caps.fork_safe
+    engine: str = "numpy"             # numpy | jnp | pallas
+    description: str = ""
+    batch_fn: Optional[Callable[[List[bytes]], List]] = None
+
+    @property
+    def caps(self) -> Capabilities:
+        return Capabilities(engine=self.engine, strict=self.strict,
+                            fork_safe=self.process_eligible,
+                            batchable=self.batch_fn is not None)
+
+    def decode(self, data: bytes) -> np.ndarray:
+        return self.fn(data)
+
+    def decode_batch(self, datas: List[bytes]) -> List:
+        """Index-aligned arrays-or-exceptions — the registration-level
+        batch convention, delegated to the registry's one implementation
+        so the shim can never diverge from it."""
+        return as_spec(self).decode_batch(datas)
+
+
+_PATH_CACHE: Dict[str, Tuple[DecoderSpec, DecodePath]] = {}
+
+
+def _path_of(spec: DecoderSpec) -> DecodePath:
+    cached = _PATH_CACHE.get(spec.name)
+    if cached is not None and cached[0] is spec:
+        return cached[1]
+    path = DecodePath(name=spec.name, fn=spec.fn, strict=spec.caps.strict,
+                      process_eligible=spec.caps.fork_safe,
+                      engine=spec.caps.engine,
+                      description=spec.description, batch_fn=spec.batch_fn)
+    _PATH_CACHE[spec.name] = (spec, path)
+    return path
+
+
+class _DecodePathsView(Mapping):
+    """Live read-only mapping over the codecs registry (deprecated)."""
+
+    def __getitem__(self, name: str) -> DecodePath:
+        return _path_of(get_decoder(name))
+
+    def __iter__(self):
+        return iter(decoder_names())
+
+    def __len__(self) -> int:
+        return len(decoder_names())
+
+    def __repr__(self) -> str:
+        return f"DECODE_PATHS<deprecated view of {len(self)} decoders>"
+
+
+DECODE_PATHS: Mapping = _DecodePathsView()
+
+
 def get_path(name: str) -> DecodePath:
+    """Deprecated: use ``repro.codecs.get_decoder`` (or ``open_decoder``
+    for a context-checked session)."""
+    warnings.warn("jpeg.paths.get_path() is deprecated; use "
+                  "repro.codecs.get_decoder()/open_decoder()",
+                  DeprecationWarning, stacklevel=2)
     return DECODE_PATHS[name]
 
 
 def list_paths(process_eligible: Optional[bool] = None,
                strict: Optional[bool] = None) -> List[DecodePath]:
-    """Query registered paths by eligibility attributes (None = any).
-
-    The service router uses this to scope its arm set, e.g.
-    ``list_paths(strict=False)`` for fallback-capable arms or
-    ``list_paths(process_eligible=True)`` for fork-safe deployments.
+    """Deprecated: use ``repro.codecs.list_decoders`` — eligibility is a
+    (capabilities, context) question answered by the ``eligible``
+    resolver, e.g. ``list_decoders(context=ExecContext.PROCESS_POOL)``.
     """
+    warnings.warn("jpeg.paths.list_paths() is deprecated; use "
+                  "repro.codecs.list_decoders()",
+                  DeprecationWarning, stacklevel=2)
     out = []
-    for p in DECODE_PATHS.values():
-        if process_eligible is not None \
-                and p.process_eligible != process_eligible:
+    for spec in list_decoders():
+        if process_eligible is not None and \
+                bool(eligible(spec.caps, ExecContext.PROCESS_POOL)) \
+                != process_eligible:
             continue
-        if strict is not None and p.strict != strict:
+        if strict is not None and spec.caps.strict != strict:
             continue
-        out.append(p)
+        out.append(_path_of(spec))
     return out

@@ -80,6 +80,34 @@ def finalize_np(rgb: np.ndarray, h: int, w: int) -> np.ndarray:
     return np.clip(np.round(rgb[:h, :w]), 0, 255).astype(np.uint8)
 
 
+def assemble_image(spec: DecodeSpec, planes: Sequence[np.ndarray],
+                   ycbcr_fn=None) -> np.ndarray:
+    """The shared plane-assembly tail every host-side decode path ends
+    with: upsample each component plane to the max sampling factor, crop
+    to the common extent, dispatch the 1/3/4-component colorspace
+    conversion (gray / YCbCr / Adobe-YCCK), finalize to RGB u8 [H, W, 3].
+
+    ``planes`` are the per-component level-shifted spatial planes, one
+    per ``spec.components`` entry, pre-upsample. ``ycbcr_fn`` overrides
+    the 3-component conversion (the Pallas paths pass their fused kernel
+    wrapper); 1- and 4-component handling is engine-independent.
+    """
+    hmax = max(c.h for c in spec.components)
+    vmax = max(c.v for c in spec.components)
+    planes = [upsample_np(p, hmax // c.h, vmax // c.v)
+              for p, c in zip(planes, spec.components)]
+    hh = min(p.shape[0] for p in planes)
+    ww = min(p.shape[1] for p in planes)
+    planes = [p[:hh, :ww] for p in planes]
+    if len(planes) == 1:
+        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
+    elif len(planes) == 3:
+        rgb = (ycbcr_fn or ycbcr_to_rgb_np)(*planes)
+    else:
+        rgb = ycck_to_rgb_np(*planes)
+    return finalize_np(np.asarray(rgb, np.float64), spec.height, spec.width)
+
+
 # ------------------------------------------------------------------ jnp
 def dequant_jnp(coefs, qtable):
     return coefs.astype(jnp.float32) * qtable.astype(jnp.float32)
@@ -132,8 +160,6 @@ def finalize_jnp(rgb, h: int, w: int):
 def transform_np(spec: DecodeSpec, coef: Dict[int, np.ndarray],
                  fast_idct: bool = True, int_idct: bool = False,
                  sparse_idct: bool = False) -> np.ndarray:
-    hmax = max(c.h for c in spec.components)
-    vmax = max(c.v for c in spec.components)
     planes = []
     for c in spec.components:
         q = spec.qtables[c.tq].astype(np.float64)
@@ -149,18 +175,8 @@ def transform_np(spec: DecodeSpec, coef: Dict[int, np.ndarray],
             blocks = idct_blocks_np_fast(deq)
         else:
             blocks = idct_blocks_np(deq)
-        plane = assemble_plane_np(blocks) + 128.0
-        planes.append(upsample_np(plane, hmax // c.h, vmax // c.v))
-    hh = min(p.shape[0] for p in planes)
-    ww = min(p.shape[1] for p in planes)
-    planes = [p[:hh, :ww] for p in planes]
-    if len(planes) == 1:
-        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
-    elif len(planes) == 3:
-        rgb = ycbcr_to_rgb_np(*planes)
-    else:
-        rgb = ycck_to_rgb_np(*planes)
-    return finalize_np(rgb, spec.height, spec.width)
+        planes.append(assemble_plane_np(blocks) + 128.0)
+    return assemble_image(spec, planes)
 
 
 @partial(jax.jit, static_argnames=("n_comp", "factors", "h", "w",

@@ -21,33 +21,26 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-from repro.jpeg import parser as P
+from repro.codecs import BucketKey, probe_key
 
-BucketKey = Tuple[int, int, int, Tuple[Tuple[int, int], ...]]
-
-
-def _ceil_to(x: int, g: int) -> int:
-    return ((x + g - 1) // g) * g
+__all__ = ["Batch", "BucketKey", "MicroBatcher", "bucket_key"]
 
 
 def bucket_key(data: bytes, granularity: int = 4) -> BucketKey:
     """Bucket identity of one JPEG: padded MCU grid + sampling structure.
 
-    Parses *headers only* (``headers_only=True`` stops at SOS): admission
-    runs on the batcher thread, and the O(file-size) entropy-stream scan
-    it would otherwise pay per request belongs to the decode workers. The
-    MCU grid (not pixel dims) is what determines coefficient-array shapes
-    and therefore compile-cache identity. Grid dims are rounded up to
-    ``granularity`` MCUs so near-identical resolutions share a bucket.
+    Delegates to ``repro.codecs.probe_key`` — the headers-only probe the
+    ``Capabilities.headers_only_probe`` flag declares (``headers_only=True``
+    parsing stops at SOS): admission runs on the batcher thread, and the
+    O(file-size) entropy-stream scan it would otherwise pay per request
+    belongs to the decode workers. The MCU grid (not pixel dims) is what
+    determines coefficient-array shapes and therefore compile-cache
+    identity; grid dims round up to ``granularity`` MCUs so near-identical
+    resolutions share a bucket.
     """
-    spec = P.parse(data, headers_only=True)
-    mcu_rows = -(-spec.height // spec.mcu_h)
-    mcu_cols = -(-spec.width // spec.mcu_w)
-    sampling = tuple((c.h, c.v) for c in spec.components)
-    return (_ceil_to(mcu_rows, granularity), _ceil_to(mcu_cols, granularity),
-            len(spec.components), sampling)
+    return probe_key(data, granularity)
 
 
 @dataclasses.dataclass

@@ -15,13 +15,15 @@ explicit shedding at admission — never as unbounded memory or deadlock):
 * The batcher thread groups requests by padded-MCU-grid bucket (admission
   parses headers only — the entropy scan belongs to decode workers) and
   flushes on fill or deadline.
-* Each worker serves a micro-batch with ONE ``decode_batch`` call on the
-  router-picked path — batched paths run the post-entropy transform as a
-  real ``[B, ...]`` launch, others loop serially — feeds whole-batch
-  throughput back to the router, and retries per-item strict-path
-  ``UnsupportedJpeg`` refusals on the router's non-strict fallback — so
-  the skip ledger becomes a routing signal and clients still get pixels
-  for rare JPEG modes.
+* Each worker serves a micro-batch with ONE ``decode_batch`` call on a
+  ``repro.codecs`` decoder *session* for the router-picked arm (opened in
+  ``ExecContext.SERVICE``) — batched paths run the post-entropy transform
+  as a real ``[B, ...]`` launch, others loop serially. The session returns
+  typed ``DecodeOutcome``s: ``skip`` outcomes (strict-path refusals) are
+  recorded against the arm and retried on the router's non-strict
+  fallback — the skip ledger becomes a routing signal and clients still
+  get pixels for rare JPEG modes — while ``error`` outcomes fail only
+  their own future. Whole-batch throughput feeds back to the router.
 * ``num_workers=0`` decodes inline in the caller thread (the service
   analogue of the loader's ``num_workers=0`` protocol arm), which is what
   ``benchmarks/service_bench.py`` compares against.
@@ -37,8 +39,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.codecs import DecodeOutcome, Decoder, ExecContext, open_decoder
 from repro.jpeg.parser import UnsupportedJpeg
-from repro.jpeg.paths import DecodePath
 from repro.service.admission import AdmissionController, ServiceOverloaded
 from repro.service.batcher import Batch, MicroBatcher, bucket_key
 from repro.service.cache import DecodeCache, content_key
@@ -81,7 +83,7 @@ class DecodeService:
     """Async batched JPEG decode service over the registered paths."""
 
     def __init__(self, cfg: Optional[ServiceConfig] = None, *,
-                 paths: Optional[Sequence[DecodePath]] = None,
+                 paths: Optional[Sequence] = None,
                  router: Optional[BanditRouter] = None):
         self.cfg = cfg or ServiceConfig()
         self.router = router or BanditRouter(
@@ -98,6 +100,9 @@ class DecodeService:
         self._batchq: "queue.Queue" = queue.Queue(
             maxsize=max(2, 2 * max(1, self.cfg.num_workers)))
         self._threads: List[threading.Thread] = []
+        # decoder sessions, one per router arm, opened lazily in the
+        # SERVICE context (the outcome-typed front door to each path)
+        self._sessions: Dict[str, Decoder] = {}
         self._submit_lock = threading.Lock()
         self._started = False
         self._closed = False
@@ -136,6 +141,13 @@ class DecodeService:
                 self._batchq.put(_STOP)
             for t in self._threads[1:]:
                 t.join()
+            # close sessions only once the worker pool is quiesced. In
+            # inline mode (num_workers=0) a submitter may legitimately be
+            # mid-_serve_batch in its own thread when stop() runs, and
+            # closing under it would fail an accepted request with a
+            # session-lifecycle error — inline sessions just get GC'd.
+            for sess in list(self._sessions.values()):
+                sess.close()
 
     def __enter__(self) -> "DecodeService":
         return self.start()
@@ -219,23 +231,33 @@ class DecodeService:
                 return
             self._serve_batch(batch)
 
+    def _session(self, arm) -> Decoder:
+        """Session for a router arm, opened once in the SERVICE context.
+        A benign create-race between workers just overwrites with an
+        equivalent session."""
+        sess = self._sessions.get(arm.name)
+        if sess is None:
+            sess = open_decoder(arm, context=ExecContext.SERVICE)
+            self._sessions[arm.name] = sess
+        return sess
+
     def _serve_batch(self, batch: Batch) -> None:
         if self._abort:
             for req in batch.items:
                 self._fail(req, ServiceShutdown("aborted"))
             return
-        path = self.router.pick()
+        sess = self._session(self.router.pick())
         # ONE decode_batch call per micro-batch: same-bucket requests run
         # the post-entropy transform as a real [B, ...] batch on paths
         # that support it (serial-loop fallback otherwise). Per-item
-        # refusals/corruption come back in-place, so batch-mates are
+        # skip/error outcomes come back in-place, so batch-mates are
         # unaffected and strict refusals still reroute individually.
         t0 = time.perf_counter()
         try:
-            results = path.decode_batch([req.data for req in batch.items])
-            if len(results) != len(batch.items):
+            outcomes = sess.decode_batch([req.data for req in batch.items])
+            if len(outcomes) != len(batch.items):
                 raise RuntimeError(
-                    f"{path.name}.decode_batch returned {len(results)} "
+                    f"{sess.name}.decode_batch returned {len(outcomes)} "
                     f"results for {len(batch.items)} items")
         except Exception as e:
             # batch-level failures fail the futures, never the worker
@@ -245,38 +267,42 @@ class DecodeService:
         served_s = time.perf_counter() - t0
         refused: List[_Request] = []
         n_ok = 0
-        for req, res in zip(batch.items, results):
-            if isinstance(res, UnsupportedJpeg):
-                self.router.record_skip(path.name)
-                self.metrics.record_skip(path.name)
+        for req, out in zip(batch.items, outcomes):
+            if out.kind == DecodeOutcome.SKIP:
+                self.router.record_skip(sess.name)
+                self.metrics.record_skip(sess.name)
                 refused.append(req)
-            elif isinstance(res, BaseException):
-                self._fail(req, res)
+            elif out.kind == DecodeOutcome.ERROR:
+                self._fail(req, out.error)
             else:
                 n_ok += 1
-                self._fulfil(req, res, path.name)
+                self._fulfil(req, out.image, sess.name)
         if n_ok and served_s > 0:
             # batch-level throughput accounting: the router learns from
             # whole-batch wall time, which is what batching improves
-            self.router.update(path.name, n_ok, served_s)
+            self.router.update(sess.name, n_ok, served_s)
         for req in refused:
-            self._serve_fallback(req, path)
+            self._serve_fallback(req, sess.name)
 
-    def _serve_fallback(self, req: _Request, failed: DecodePath) -> None:
-        fb = self.router.fallback(failed.name)
+    def _serve_fallback(self, req: _Request, failed_name: str) -> None:
+        fb = self.router.fallback(failed_name)
         if fb is None:
             self._fail(req, UnsupportedJpeg(
-                f"{failed.name} refused input and no non-strict "
+                f"{failed_name} refused input and no non-strict "
                 "fallback path is registered"))
             return
+        sess = self._session(fb)
         t0 = time.perf_counter()
         try:
-            img = fb.decode(req.data)
+            out = sess.decode(req.data)
         except Exception as e:
             self._fail(req, e)
             return
-        self.router.update(fb.name, 1, time.perf_counter() - t0)
-        self._fulfil(req, img, fb.name)
+        if not out.ok:
+            self._fail(req, out.error)
+            return
+        self.router.update(sess.name, 1, time.perf_counter() - t0)
+        self._fulfil(req, out.image, sess.name)
 
     # ------------------------------------------------------------ plumbing
     def _fulfil(self, req: _Request, img: np.ndarray, path_name: str) -> None:

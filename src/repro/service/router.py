@@ -27,15 +27,16 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.codecs import ExecContext, eligible, list_decoders
 from repro.core import decision, stats
 from repro.core.schema import RunRecord
-from repro.jpeg.paths import DecodePath, list_paths
 
 
 class ArmState:
-    """Measured state of one decode path arm."""
+    """Measured state of one decode path arm (a ``codecs.DecoderSpec``
+    or any legacy path-like object with name/strict/engine)."""
 
-    def __init__(self, path: DecodePath, window: int):
+    def __init__(self, path, window: int):
         self.path = path
         self.samples: deque = deque(maxlen=window)   # images/s per batch
         self.pulls = 0
@@ -48,12 +49,16 @@ class ArmState:
 
 
 class BanditRouter:
-    def __init__(self, paths: Optional[Sequence[DecodePath]] = None, *,
+    def __init__(self, paths: Optional[Sequence] = None, *,
                  policy: str = "ucb", epsilon: float = 0.1,
                  ucb_c: float = 1.5, window: int = 128, seed: int = 0):
         if policy not in ("ucb", "epsilon"):
             raise ValueError(f"unknown bandit policy {policy!r}")
-        paths = list(paths) if paths is not None else list_paths()
+        # arm set scoped by the one eligibility authority: every decoder
+        # the resolver admits for the SERVICE context is a bandit arm
+        paths = (list(paths) if paths is not None else
+                 [s for s in list_decoders()
+                  if eligible(s.caps, ExecContext.SERVICE)])
         if not paths:
             raise ValueError("router needs at least one decode path")
         self.policy = policy
@@ -66,7 +71,7 @@ class BanditRouter:
         self._total_pulls = 0
 
     # ------------------------------------------------------------ choose
-    def pick(self) -> DecodePath:
+    def pick(self):
         with self._lock:
             cold = [a for a in self._arms.values() if a.pulls == 0]
             if cold:
@@ -105,7 +110,7 @@ class BanditRouter:
         with self._lock:
             self._arms[name].skips += 1
 
-    def fallback(self, failed_name: str) -> Optional[DecodePath]:
+    def fallback(self, failed_name: str):
         """Best-measured non-strict arm to retry an UnsupportedJpeg on."""
         with self._lock:
             cands = [a for a in self._arms.values()

@@ -1,0 +1,212 @@
+"""Capability-typed decoder API: eligibility matrix, decoder sessions and
+DecodeOutcome semantics, plugin registration round-trip, deprecation-shim
+equivalence, and the protocols' resolver-backed skip envelope."""
+import numpy as np
+import pytest
+
+from repro.codecs import (Capabilities, DecodeOutcome, ExecContext,
+                          IneligibleDecoder, decoder_names, eligible,
+                          get_decoder, list_decoders, open_decoder,
+                          register_decoder, unregister_decoder)
+from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
+
+
+# ------------------------------------------------------- eligibility matrix
+def test_eligibility_matrix_parity_with_legacy_flags():
+    """Every registered decoder x every ExecContext: the resolver verdict
+    must reproduce the old process_eligible behavior exactly — only the
+    forked pool vetoes, and only non-fork-safe (jax-backed) decoders."""
+    from repro.jpeg.paths import DECODE_PATHS
+    assert set(DECODE_PATHS) == set(decoder_names())
+    for name in decoder_names():
+        caps = get_decoder(name).caps
+        legacy = DECODE_PATHS[name]
+        for ctx in ExecContext:
+            verdict = eligible(caps, ctx)
+            if ctx is ExecContext.PROCESS_POOL:
+                assert bool(verdict) == legacy.process_eligible, (name, ctx)
+                if not verdict:
+                    assert "not process-loader eligible" in verdict.reason
+            else:
+                assert verdict, (name, ctx)
+
+
+def test_eligible_rejects_non_context():
+    with pytest.raises(TypeError):
+        eligible(Capabilities(), "process")
+
+
+def test_open_decoder_enforces_context():
+    with pytest.raises(IneligibleDecoder, match="jnp-fused"):
+        open_decoder("jnp-fused", context=ExecContext.PROCESS_POOL)
+    open_decoder("numpy-fast", context=ExecContext.PROCESS_POOL).close()
+
+
+def test_list_decoders_context_filter_is_resolver_backed():
+    forkable = {s.name for s in
+                list_decoders(context=ExecContext.PROCESS_POOL)}
+    assert forkable == {n for n in decoder_names()
+                        if eligible(get_decoder(n).caps,
+                                    ExecContext.PROCESS_POOL)}
+    assert {s.name for s in list_decoders(context=ExecContext.PROCESS_POOL,
+                                          strict=False)} \
+        == {"numpy-ref", "numpy-fast", "numpy-int", "numpy-sparse",
+            "fft-idct"}
+
+
+# ------------------------------------------------------------------ sessions
+def test_decode_outcome_semantics(corpus):
+    with open_decoder("strict-fast") as dec:
+        ok = dec.decode(corpus.files[0])
+        assert ok.ok and ok.kind == DecodeOutcome.IMAGE
+        assert ok.unwrap().dtype == np.uint8
+
+        skip = dec.decode(corpus.files[corpus.rare_index])
+        assert skip.kind == DecodeOutcome.SKIP and not skip.ok
+        assert isinstance(skip.error, UnsupportedJpeg) and skip.reason
+        with pytest.raises(UnsupportedJpeg):
+            skip.unwrap()
+
+        err = dec.decode(b"\x00\x01not-a-jpeg")
+        assert err.kind == DecodeOutcome.ERROR
+        assert isinstance(err.error, CorruptJpeg)
+
+
+def test_decode_batch_outcomes_index_aligned(corpus):
+    with open_decoder("strict-fast") as dec:
+        outs = dec.decode_batch([corpus.files[0], b"\xff\xd8 broken",
+                                 corpus.files[corpus.rare_index]])
+    assert [o.kind for o in outs] == [DecodeOutcome.IMAGE,
+                                      DecodeOutcome.ERROR,
+                                      DecodeOutcome.SKIP]
+
+
+def test_session_lifecycle_close_and_warmup(corpus):
+    dec = open_decoder("jnp-batch", context=ExecContext.THREAD_POOL)
+    assert dec.warmup(corpus.files[:2]) == 2       # warms batch path too
+    dec.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        dec.decode(corpus.files[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        with dec:
+            pass                                   # reopen is not a thing
+
+
+def test_probe_matches_batcher_bucket_key(corpus):
+    from repro.service.batcher import bucket_key
+    with open_decoder("numpy-fast") as dec:
+        for f in corpus.files:
+            assert dec.probe(f) == bucket_key(f, granularity=4)
+
+
+# ---------------------------------------------------------- plugin registry
+@pytest.fixture
+def plugin():
+    name = "test-plugin"
+
+    @register_decoder(name, engine="numpy",
+                      description="test-local stub decoder")
+    def _decode(data: bytes) -> np.ndarray:
+        return np.zeros((8, 8, 3), np.uint8)
+
+    yield name
+    unregister_decoder(name)
+
+
+def test_plugin_round_trip_registry(plugin):
+    spec = get_decoder(plugin)
+    assert spec.caps.fork_safe and not spec.caps.batchable
+    assert plugin in decoder_names()
+    # duplicate registration is a hard error unless replace=True
+    with pytest.raises(ValueError, match="already registered"):
+        register_decoder(plugin, lambda d: None)
+    register_decoder(plugin, spec.fn, caps=spec.caps, replace=True)
+
+
+def test_plugin_appears_in_bench_registry_cells(plugin):
+    """A decoder registered in a test shows up as bench scenario cells —
+    single-thread, the full loader sweep (incl. process: it is numpy/
+    fork-safe) — with no bench file changing."""
+    from repro.bench import build_registry
+    names = {s.name for s in build_registry()}
+    assert f"single/{plugin}" in names
+    assert f"loader/{plugin}/w0/thread" in names
+    assert f"loader/{plugin}/w2/process" in names
+    assert f"batched/{plugin}" not in names        # no batch_fn registered
+    # ...and the legacy DECODE_PATHS view reflects it live
+    from repro.jpeg.paths import DECODE_PATHS
+    assert plugin in DECODE_PATHS
+
+
+def test_plugin_becomes_service_router_arm(plugin):
+    from repro.service.router import BanditRouter
+    router = BanditRouter()                        # default arm set
+    assert plugin in router.snapshot()
+
+
+def test_plugin_runs_through_protocols(corpus, plugin):
+    from repro.core.protocols import SingleThreadProtocol
+    rec = SingleThreadProtocol(corpus, repeats=1,
+                               warmup=False).run_path(plugin)
+    assert rec.decoder == plugin and rec.throughput_mean > 0
+    assert rec.meta["engine"] == "numpy"
+
+
+def test_unregister_unknown_decoder_raises():
+    with pytest.raises(KeyError):
+        unregister_decoder("never-registered")
+
+
+# ------------------------------------------------------------------- shims
+def test_deprecation_shims_equivalent():
+    from repro.jpeg import paths
+    with pytest.warns(DeprecationWarning):
+        p = paths.get_path("numpy-fast")
+    spec = get_decoder("numpy-fast")
+    assert p.fn is spec.fn and p.batch_fn is spec.batch_fn
+    assert p.engine == spec.caps.engine
+    assert p.process_eligible == spec.caps.fork_safe
+    with pytest.warns(DeprecationWarning):
+        legacy = {q.name for q in paths.list_paths(process_eligible=True,
+                                                   strict=False)}
+    assert legacy == {s.name for s in
+                      list_decoders(context=ExecContext.PROCESS_POOL,
+                                    strict=False)}
+    # the adapter round-trips through as_spec with identical capabilities
+    from repro.codecs import as_spec
+    back = as_spec(p)
+    assert back.caps == spec.caps and back.fn is spec.fn
+
+
+def test_decode_path_adapter_decodes(corpus):
+    from repro.jpeg.paths import DECODE_PATHS
+    img = DECODE_PATHS["numpy-fast"].decode(corpus.files[0])
+    assert img.dtype == np.uint8
+    out = DECODE_PATHS["strict-fast"].decode_batch(
+        [corpus.files[0], corpus.files[corpus.rare_index]])
+    assert isinstance(out[1], UnsupportedJpeg)
+
+
+# ------------------------------------------------- protocol skip envelope
+def test_loader_protocol_ineligible_cell_is_schema_skip(corpus):
+    from repro.core.protocols import LoaderProtocol
+    from repro.core.schema import validate_record
+    lp = LoaderProtocol(corpus, mode="process", repeats=1)
+    rec = lp.run_path("jnp-fused", 2)
+    assert rec.status == "skipped" and not rec.ok
+    assert rec.samples == [] and rec.throughput_mean == 0.0
+    assert "not process-loader eligible" in rec.meta["reason"]
+    validate_record(rec.to_json())
+    # w=0 decodes inline: pool mode is moot, the cell is eligible
+    assert lp.run_path("jnp-fused", 0).ok
+
+
+def test_single_thread_throughput_counts_per_pass_delivery(corpus):
+    """warmup=False on a strict path: the first timed pass discovers the
+    skips, and its throughput must count only delivered images — the old
+    n_items snapshot was taken before any skip existed."""
+    from repro.core.protocols import SingleThreadProtocol
+    rec = SingleThreadProtocol(corpus, repeats=2,
+                               warmup=False).run_path("strict-fast")
+    assert rec.skip_indices == [corpus.rare_index]
+    assert rec.meta["delivered"] == len(corpus.files) - 1
