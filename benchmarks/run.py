@@ -5,7 +5,12 @@ Subcommands:
   sweep    (default) run the scenario-matrix harness; emits validated
            RunRecord JSON + derived reports into artifacts/bench/.
            ``--smoke`` / ``--full`` pick the profile; ``--only`` narrows
-           to named scenarios (validated — typos are hard errors).
+           to named scenarios (validated — typos are hard errors);
+           ``--shards`` points storage-backed cells at an existing
+           ingest (fingerprint-checked against the profile corpus).
+  ingest   write a profile's synthetic corpus into a shard directory
+           (repro.store format: crc32'd shards + JSON manifest) for the
+           sweep's ``source=shard`` cells — or any external consumer.
   tables   regenerate the per-paper-table CSV views (table1..5, fig3,
            kernels, roofline, service) — now derived from one shared
            sweep instead of nine ad-hoc measurement loops.
@@ -19,7 +24,7 @@ silently swallowed (the old ``parse_known_args`` behavior hid typos).
 import argparse
 import sys
 
-SUBCOMMANDS = ("sweep", "tables", "compare", "list")
+SUBCOMMANDS = ("sweep", "tables", "compare", "list", "ingest")
 TABLES = ("table1", "table2", "table3", "table4", "table5",
           "fig3", "kernels", "roofline", "service")
 
@@ -55,6 +60,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "prefixes (e.g. 'single,loader/numpy-fast')")
     sw.add_argument("--out", default=None,
                     help="artifact directory (default artifacts/bench)")
+    sw.add_argument("--shards", default=None,
+                    help="existing shard-ingest directory for "
+                         "source=shard cells (default: ingest into "
+                         "<out>/shards on first touch)")
+
+    ig = sub.add_parser("ingest",
+                        help="write a profile corpus as repro.store "
+                             "shards + manifest")
+    _add_profile_flags(ig)
+    ig.add_argument("--out", required=True,
+                    help="shard directory to create/populate")
+    ig.add_argument("--shard-size", type=int, default=64,
+                    help="records per shard file (default 64)")
 
     tb = sub.add_parser("tables", help="regenerate paper-table CSV views")
     tb.add_argument("--full", action="store_true")
@@ -82,6 +100,8 @@ def cmd_sweep(args) -> int:
     kw = {}
     if args.out:
         kw["out_dir"] = args.out
+    if args.shards:
+        kw["shard_dir"] = args.shards
     try:
         res = run_sweep(_profile_from_flags(args), only=only, **kw)
     except BenchSelectionError as e:
@@ -100,6 +120,23 @@ def cmd_sweep(args) -> int:
     if res.out_dir:
         print(f"# records: {res.files[0]}", file=sys.stderr)
     return 1 if errors else 0
+
+
+def cmd_ingest(args) -> int:
+    from repro.bench import PROFILES
+    from repro.jpeg.corpus import build_corpus, write_corpus_shards
+    from repro.store import load_manifest
+    prof = PROFILES[_profile_from_flags(args)]
+    corpus = build_corpus(prof.corpus_n, seed=prof.corpus_seed)
+    manifest = write_corpus_shards(corpus, args.out,
+                                   shard_size=args.shard_size)
+    man = load_manifest(args.out)
+    print(f"ingested {man['record_count']} records "
+          f"({len(man['shards'])} shard(s), profile {prof.name!r}, "
+          f"n={prof.corpus_n}, seed={prof.corpus_seed})")
+    print(f"fingerprint {man['fingerprint']}")
+    print(f"manifest {manifest}")
+    return 0
 
 
 def cmd_tables(args) -> int:
@@ -183,7 +220,8 @@ def main(argv=None) -> int:
             argv.insert(0, "sweep")
     args = build_parser().parse_args(argv)
     handler = {"sweep": cmd_sweep, "tables": cmd_tables,
-               "compare": cmd_compare, "list": cmd_list}[args.cmd]
+               "compare": cmd_compare, "list": cmd_list,
+               "ingest": cmd_ingest}[args.cmd]
     return handler(args)
 
 

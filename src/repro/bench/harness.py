@@ -21,8 +21,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import tempfile
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.bench import service_load
 from repro.bench.registry import (KIND_BATCHED, KIND_LOADER,
@@ -33,7 +34,9 @@ from repro.common.hw import host_fingerprint
 from repro.core import decision, report
 from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
 from repro.core.schema import RunRecord, save_records, validate_record
-from repro.jpeg.corpus import build_corpus
+from repro.jpeg.corpus import (build_corpus, corpus_fingerprint,
+                               load_corpus_shards, write_corpus_shards)
+from repro.store import ShardError, manifest_path
 
 DEFAULT_OUT = os.path.join("artifacts", "bench")
 
@@ -69,15 +72,22 @@ def _error_record(s: Scenario, err: BaseException,
 
 
 class _SweepContext:
-    """Lazily-built shared state (corpus, protocol instances, request
-    stream) so a --only run pays only for what it touches."""
+    """Lazily-built shared state (corpus, protocol instances, shard
+    ingest, request stream) so a --only run pays only for what it
+    touches."""
 
-    def __init__(self, profile: Profile, platform: str):
+    def __init__(self, profile: Profile, platform: str,
+                 out_dir: Optional[str] = None,
+                 shard_dir: Optional[str] = None):
         self.profile = profile
         self.platform = platform
+        self.out_dir = out_dir
+        self._shard_dir = shard_dir
+        self._tmp_shards = None
+        self._shard_source = None
         self._corpus = None
         self._single = None
-        self._loaders: Dict[str, LoaderProtocol] = {}
+        self._loaders: Dict[Tuple[str, str], LoaderProtocol] = {}
         self._stream = None
         self.peak_closed_ips = 0.0
 
@@ -89,6 +99,51 @@ class _SweepContext:
         return self._corpus
 
     @property
+    def shard_dir(self) -> str:
+        if self._shard_dir is None:
+            if self.out_dir:
+                self._shard_dir = os.path.join(self.out_dir, "shards")
+            else:
+                self._tmp_shards = tempfile.TemporaryDirectory(
+                    prefix="bench-shards-")
+                self._shard_dir = self._tmp_shards.name
+        return self._shard_dir
+
+    @property
+    def shard_source(self):
+        """The storage-backed twin of ``corpus``: reuse an existing
+        ingest when the directory already holds a manifest (the CI path:
+        ``run.py ingest`` ran first), else ingest in-context. Either
+        way the fingerprint must match the profile corpus — a shard
+        cell must decode byte-identical records to its memory twin, or
+        the comparison is meaningless."""
+        if self._shard_source is None:
+            root = self.shard_dir
+            if not os.path.exists(manifest_path(root)):
+                write_corpus_shards(self.corpus, root)
+            src = load_corpus_shards(root)
+            want = corpus_fingerprint(self.corpus)
+            if src.fingerprint != want:
+                raise ShardError(
+                    f"shard corpus at {root} has fingerprint "
+                    f"{src.fingerprint}, but profile "
+                    f"{self.profile.name!r} (n={self.profile.corpus_n}, "
+                    f"seed={self.profile.corpus_seed}) needs {want}; "
+                    "re-ingest with `benchmarks/run.py ingest`")
+            self._shard_source = src
+        return self._shard_source
+
+    def loader(self, mode: str, source: str = "memory") -> LoaderProtocol:
+        key = (mode, source)
+        if key not in self._loaders:
+            self._loaders[key] = LoaderProtocol(
+                self.corpus, repeats=self.profile.loader_repeats,
+                mode=mode, platform=self.platform,
+                source=self.shard_source if source == "shard" else None,
+                source_name=source)
+        return self._loaders[key]
+
+    @property
     def single(self) -> SingleThreadProtocol:
         if self._single is None:
             self._single = SingleThreadProtocol(
@@ -96,12 +151,13 @@ class _SweepContext:
                 platform=self.platform)
         return self._single
 
-    def loader(self, mode: str) -> LoaderProtocol:
-        if mode not in self._loaders:
-            self._loaders[mode] = LoaderProtocol(
-                self.corpus, repeats=self.profile.loader_repeats,
-                mode=mode, platform=self.platform)
-        return self._loaders[mode]
+    def close(self) -> None:
+        if self._shard_source is not None:
+            self._shard_source.close()
+            self._shard_source = None
+        if self._tmp_shards is not None:
+            self._tmp_shards.cleanup()
+            self._tmp_shards = None
 
     @property
     def stream(self):
@@ -116,7 +172,14 @@ def _run_scenario(s: Scenario, ctx: _SweepContext) -> RunRecord:
     if s.kind == KIND_SINGLE:
         return ctx.single.run_path(s.path)
     if s.kind == KIND_LOADER:
-        return ctx.loader(s.mode).run_path(s.path, s.workers)
+        rec = ctx.loader(s.mode, s.source).run_path(s.path, s.workers)
+        if s.source == "shard":
+            rec.meta["corpus_fingerprint"] = ctx.shard_source.fingerprint
+            if ctx._tmp_shards is None:
+                # only record a manifest path that outlives the sweep;
+                # a temp-dir ingest (out_dir=None) is deleted on close
+                rec.meta["shard_manifest"] = manifest_path(ctx.shard_dir)
+        return rec
     if s.kind == KIND_BATCHED:
         r = service_load.batched_vs_serial(
             ctx.corpus, n_requests=ctx.profile.batched_requests,
@@ -157,6 +220,7 @@ def _run_scenario(s: Scenario, ctx: _SweepContext) -> RunRecord:
 
 def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
               out_dir: Optional[str] = DEFAULT_OUT,
+              shard_dir: Optional[str] = None,
               platform: str = "live-host",
               progress=None) -> SweepResult:
     """Execute the scenario matrix under ``profile``.
@@ -166,35 +230,45 @@ def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
     Cells matched but outside the profile's budget become explicit
     skipped records. Scenario failures become error records — one broken
     path must not take down the sweep that measures the other fifteen.
+
+    Storage-backed (``source == "shard"``) cells read the profile corpus
+    through the ``repro.store`` shard store: from ``shard_dir`` when it
+    already holds a matching ingest (``benchmarks/run.py ingest``), else
+    ingested on first touch into ``<out_dir>/shards`` (a temp dir when
+    ``out_dir`` is None).
     """
     if profile not in PROFILES:
         raise ValueError(f"unknown profile {profile!r}; "
                          f"valid: {sorted(PROFILES)}")
     prof = PROFILES[profile]
     scenarios = select_scenarios(only)
-    ctx = _SweepContext(prof, platform)
+    ctx = _SweepContext(prof, platform, out_dir=out_dir,
+                        shard_dir=shard_dir)
     records: List[RunRecord] = []
     t_start = time.perf_counter()
-    for s in scenarios:
-        run_it, reason = prof.wants(s)
-        if not run_it:
-            records.append(_skip_record(s, reason, platform))
-            continue
-        t0 = time.perf_counter()
-        try:
-            rec = _run_scenario(s, ctx)
-            # ineligible cells (e.g. jax paths x process pool) already
-            # arrive as schema "skipped" records from the protocols —
-            # everything else measured is ok
-            rec.meta.setdefault("status", "ok")
-            rec.meta["scenario"] = s.name
-            rec.meta["elapsed_s"] = round(time.perf_counter() - t0, 3)
-        except Exception as e:                 # noqa: BLE001 — isolate cell
-            rec = _error_record(s, e, platform)
-        validate_record(rec.to_json())
-        records.append(rec)
-        if progress is not None:
-            progress(s, rec)
+    try:
+        for s in scenarios:
+            run_it, reason = prof.wants(s)
+            if not run_it:
+                records.append(_skip_record(s, reason, platform))
+                continue
+            t0 = time.perf_counter()
+            try:
+                rec = _run_scenario(s, ctx)
+                # ineligible cells (e.g. jax paths x process pool) already
+                # arrive as schema "skipped" records from the protocols —
+                # everything else measured is ok
+                rec.meta.setdefault("status", "ok")
+                rec.meta["scenario"] = s.name
+                rec.meta["elapsed_s"] = round(time.perf_counter() - t0, 3)
+            except Exception as e:             # noqa: BLE001 — isolate cell
+                rec = _error_record(s, e, platform)
+            validate_record(rec.to_json())
+            records.append(rec)
+            if progress is not None:
+                progress(s, rec)
+    finally:
+        ctx.close()
     elapsed = time.perf_counter() - t_start
     files = []
     if out_dir:

@@ -2,8 +2,8 @@
 
 Every decoder in the ``repro.codecs`` registry crosses every evaluation
 protocol the paper names — single-thread, DataLoader-shaped worker sweep
-{0,2,4,8} x {thread, process} pool modes, batched decode, and the online
-service's closed/open-loop load models. The matrix is rebuilt from the
+{0,2,4,8} x {thread, process} pool modes x {memory, shard} data sources,
+batched decode, and the online service's closed/open-loop load models. The matrix is rebuilt from the
 live registry on every call, so a decoder plugged in via
 ``@register_decoder`` gets its cells with no edit here. A *profile*
 (smoke / quick / full) selects which cells actually execute; cells a
@@ -21,6 +21,14 @@ from repro.codecs import decoder_names, list_decoders
 
 WORKER_SWEEP = (0, 2, 4, 8)
 POOL_MODES = ("thread", "process")
+# The data-source axis of loader cells: "memory" is the paper's
+# decode-from-RAM protocol (and the suffixless scenario name, so compare
+# keys stay stable across the axis's introduction); "shard" reads the
+# same corpus through the mmap-backed repro.store shard store — the
+# deployment-matched source where IO, page cache, and worker reopen
+# costs participate. Single-thread cells stay memory-only: that protocol
+# is *defined* as from-memory decode.
+SOURCES = ("memory", "shard")
 
 KIND_SINGLE = "single_thread"
 KIND_LOADER = "dataloader"
@@ -38,6 +46,7 @@ class Scenario:
     path: str = ""                 # decode path; "" for service scenarios
     workers: int = 0
     mode: str = ""                 # thread | process for loader cells
+    source: str = "memory"         # memory | shard for loader cells
 
 
 def build_registry() -> List[Scenario]:
@@ -54,8 +63,11 @@ def build_registry() -> List[Scenario]:
             # the matrix has one w0 cell per path (thread label).
             modes = ("thread",) if w == 0 else POOL_MODES
             for m in modes:
-                out.append(Scenario(f"loader/{p}/w{w}/{m}", KIND_LOADER,
-                                    path=p, workers=w, mode=m))
+                for src in SOURCES:
+                    suffix = "" if src == "memory" else f"/{src}"
+                    out.append(Scenario(
+                        f"loader/{p}/w{w}/{m}{suffix}", KIND_LOADER,
+                        path=p, workers=w, mode=m, source=src))
     for p in names:
         if p in batchable:
             out.append(Scenario(f"batched/{p}", KIND_BATCHED, path=p))
@@ -88,7 +100,7 @@ class Profile:
     service_requests: int
     batched_requests: int
     single_paths: Optional[FrozenSet[str]]
-    loader_cells: Optional[FrozenSet[Tuple[str, int, str]]]
+    loader_cells: Optional[FrozenSet[Tuple[str, int, str, str]]]
     batched_paths: Optional[FrozenSet[str]]
     service_closed: FrozenSet[int]
     service_open: FrozenSet[int]
@@ -101,7 +113,8 @@ class Profile:
                 return True, ""
         elif s.kind == KIND_LOADER:
             if self.loader_cells is None or \
-                    (s.path, s.workers, s.mode) in self.loader_cells:
+                    (s.path, s.workers, s.mode, s.source) \
+                    in self.loader_cells:
                 return True, ""
         elif s.kind == KIND_BATCHED:
             if self.batched_paths is None or s.path in self.batched_paths:
@@ -123,10 +136,12 @@ def _paths(*, engines: Optional[Tuple[str, ...]] = None,
         and s.name not in exclude)
 
 
-def _cells(paths, workers, modes) -> FrozenSet[Tuple[str, int, str]]:
+def _cells(paths, workers, modes,
+           sources=("memory",)) -> FrozenSet[Tuple[str, int, str, str]]:
     return frozenset(
-        (p, w, m) for p in paths for w in workers
-        for m in (("thread",) if w == 0 else modes))
+        (p, w, m, src) for p in paths for w in workers
+        for m in (("thread",) if w == 0 else modes)
+        for src in sources)
 
 
 # Pallas paths run interpret-mode on CPU — a correctness surface, not a
@@ -145,9 +160,12 @@ PROFILES: Dict[str, Profile] = {
         st_repeats=2, loader_repeats=2,
         service_requests=16, batched_requests=24,
         single_paths=_SMOKE_SINGLE,
+        # the storage-backed cell and its in-memory twin: the pair the
+        # acceptance gate compares for byte-identity + measured status
         loader_cells=_cells(("numpy-fast", "jnp-fused"), (0, 2),
                             ("thread",))
-        | frozenset({("numpy-fast", 2, "process")}),
+        | frozenset({("numpy-fast", 2, "process", "memory"),
+                     ("numpy-fast", 2, "process", "shard")}),
         batched_paths=frozenset({"jnp-batch"}),
         service_closed=frozenset({2}),
         service_open=frozenset(),
@@ -158,8 +176,9 @@ PROFILES: Dict[str, Profile] = {
         service_requests=96, batched_requests=48,
         single_paths=_QUICK_SINGLE,
         loader_cells=_cells(sorted(_QUICK_SINGLE), (0, 2), ("thread",))
-        | frozenset({("numpy-fast", 2, "process"),
-                     ("numpy-int", 2, "process")}),
+        | frozenset({("numpy-fast", 2, "process", "memory"),
+                     ("numpy-fast", 2, "process", "shard"),
+                     ("numpy-int", 2, "process", "memory")}),
         batched_paths=frozenset({"jnp-batch"}),
         service_closed=frozenset({0, 2}),
         service_open=frozenset({2}),

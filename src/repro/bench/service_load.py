@@ -29,9 +29,14 @@ from repro.service import DecodeService, ServiceConfig, ServiceOverloaded
 BASELINE_PATH = "numpy-fast"
 
 
-def request_stream(corpus: Corpus, n_requests: int, seed: int) -> List[bytes]:
-    idx = zipf_indices(len(corpus.files), n_requests, seed)
-    return [corpus.files[i] for i in idx]
+def request_stream(source, n_requests: int, seed: int) -> List[bytes]:
+    """Zipf-weighted request mix over ``source`` — a ``Corpus`` or any
+    ``repro.store.ByteSource``. Shard-backed sources yield zero-copy
+    ``memoryview`` payloads, which ``DecodeService.submit`` accepts
+    as-is (hashing, probing, and decode all read the buffer in place)."""
+    files = source.files if isinstance(source, Corpus) else source
+    idx = zipf_indices(len(files), n_requests, seed)
+    return [files[i] for i in idx]
 
 
 def serial_baseline(stream: List[bytes],

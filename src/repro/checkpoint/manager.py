@@ -41,6 +41,21 @@ def _flatten_with_names(tree) -> Dict[str, Any]:
     return flat
 
 
+def _msgpack_default(obj):
+    """Manifest extras carry iterator/sampler state (loader cursors,
+    window-shuffle samplers) that often arrives as numpy scalars —
+    msgpack refuses those, so coerce to plain Python here instead of
+    making every producer sanitize."""
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"cannot msgpack {type(obj).__name__} in checkpoint "
+                    "extras")
+
+
 def save_pytree(tree, directory: str, *, extra: Optional[dict] = None) -> None:
     tmp = directory + ".tmp"
     if os.path.exists(tmp):
@@ -55,7 +70,7 @@ def save_pytree(tree, directory: str, *, extra: Optional[dict] = None) -> None:
         manifest["leaves"][name] = {
             "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
+        f.write(msgpack.packb(manifest, default=_msgpack_default))
         f.flush()
         os.fsync(f.fileno())
     if os.path.exists(directory):

@@ -74,15 +74,30 @@ class DecoderSpec:
 
 
 _REGISTRY: Dict[str, DecoderSpec] = {}
-_BUILTIN_MODULE = "repro.jpeg.paths"
+# the built-in decode paths live in repro.jpeg.paths and the optional
+# real-backend plugins (Pillow/OpenCV) in repro.codecs.contrib; both
+# register at import. Importing lazily here breaks the would-be cycle
+# (paths -> codecs at import time, codecs -> paths at first use); a
+# module already mid-import sits in sys.modules, so no recursion.
+_BUILTIN_MODULES = ("repro.jpeg.paths", "repro.codecs.contrib")
+_LOADING_BUILTINS = False
 
 
 def _ensure_builtins() -> None:
-    # the built-in decode paths live in repro.jpeg.paths, which registers
-    # them at import; importing lazily here breaks the would-be cycle
-    # (paths -> codecs at import time, codecs -> paths at first use)
-    if _BUILTIN_MODULE not in sys.modules:
-        __import__(_BUILTIN_MODULE)
+    # reentrancy guard: the builtin modules call register_decoder at
+    # import, which lands back here — without the guard the first such
+    # call would import contrib mid-way through paths' registrations and
+    # scramble registration (= bench emission) order across entry points
+    global _LOADING_BUILTINS
+    if _LOADING_BUILTINS:
+        return
+    _LOADING_BUILTINS = True
+    try:
+        for mod in _BUILTIN_MODULES:
+            if mod not in sys.modules:
+                __import__(mod)
+    finally:
+        _LOADING_BUILTINS = False
 
 
 def register_decoder(name: str, fn: Optional[Callable] = None, *,

@@ -106,19 +106,34 @@ class SingleThreadProtocol:
 
 
 class LoaderProtocol:
+    """The deployment-matched protocol, over either data source.
+
+    By default the corpus is consumed from memory (the paper's setup).
+    Passing ``source=`` (any ``repro.store.ByteSource``, e.g. a
+    mmap-backed ``ShardSource``) measures the same decoder matrix
+    storage-backed; ``source_name`` labels the axis in emitted records.
+    """
+
     def __init__(self, corpus: Corpus, *, repeats: int = 2,
                  batch_size: int = 16, mode: str = "thread",
-                 platform: str = "live-host", warmup: bool = True):
+                 platform: str = "live-host", warmup: bool = True,
+                 source=None, source_name: str = "memory"):
         self.corpus = corpus
         self.repeats = repeats
         self.batch_size = batch_size
         self.mode = mode
         self.platform = platform
         self.warmup = warmup
+        self.source = source
+        self.source_name = source_name if source is not None else "memory"
 
     def _loader(self, spec, workers: int) -> DataLoader:
         cfg = LoaderConfig(batch_size=self.batch_size, num_workers=workers,
                            mode=self.mode)
+        if self.source is not None:
+            return DataLoader(self.source, None, spec.fn, cfg,
+                              path_name=spec.name,
+                              batch_decode_fn=spec.decode_batch)
         return DataLoader(self.corpus.files, self.corpus.labels,
                           spec.fn, cfg, path_name=spec.name,
                           batch_decode_fn=spec.decode_batch)
@@ -133,11 +148,12 @@ class LoaderProtocol:
                 platform=self.platform, decoder=spec.name,
                 protocol="dataloader", workers=workers, mode=self.mode,
                 throughput_mean=0.0, throughput_std=0.0, samples=[],
-                num_images=len(self.corpus.files),
+                num_images=self._num_images(),
                 meta={"status": "skipped", "eligible": False,
                       "reason": verdict.reason,
                       "engine": spec.caps.engine,
-                      "strict": spec.caps.strict})
+                      "strict": spec.caps.strict,
+                      "source": self.source_name})
         if self.warmup:
             for _ in self._loader(spec, 0):
                 pass
@@ -150,9 +166,10 @@ class LoaderProtocol:
             one_pass.skips = loader.ledger.indices()
             one_pass.n = n
             one_pass.loader_stats = loader.stats()
+            loader.close()
 
         one_pass()
-        samples = _thr_samples(one_pass, len(self.corpus.files),
+        samples = _thr_samples(one_pass, self._num_images(),
                                self.repeats)
         return RunRecord(
             platform=self.platform, decoder=spec.name,
@@ -160,11 +177,16 @@ class LoaderProtocol:
             throughput_mean=float(np.mean(samples)),
             throughput_std=float(np.std(samples, ddof=1))
             if len(samples) > 1 else 0.0,
-            samples=samples, num_images=len(self.corpus.files),
+            samples=samples, num_images=self._num_images(),
             skip_indices=one_pass.skips,
             meta={"engine": spec.caps.engine, "strict": spec.caps.strict,
                   "eligible": True, "delivered": one_pass.n,
+                  "source": self.source_name,
                   "loader": one_pass.loader_stats})
+
+    def _num_images(self) -> int:
+        return (len(self.source) if self.source is not None
+                else len(self.corpus.files))
 
 
 class WorkerSweep:

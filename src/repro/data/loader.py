@@ -26,6 +26,7 @@ import dataclasses
 import queue
 import threading
 import time
+import weakref
 from concurrent.futures import ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -33,6 +34,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
+from repro.store.sampler import window_shuffle_order
+from repro.store.source import as_byte_source
 
 
 @dataclasses.dataclass
@@ -52,6 +55,9 @@ class LoaderConfig:
     decode_batch: int = 0             # thread mode: decode chunks of this
                                       # many files via the path's
                                       # decode_batch (0 = per-item)
+    shuffle_window: int = 0           # 0 = full-permutation shuffle; >0 =
+                                      # streaming window shuffle (storage-
+                                      # friendly; see repro.store.sampler)
 
 
 class SkipLedger:
@@ -94,35 +100,50 @@ def center_fit(img: np.ndarray, th: int, tw: int) -> np.ndarray:
     return img
 
 
-# process-pool plumbing: globals installed by the initializer (fork/spawn)
-_PROC_FILES: Optional[List[bytes]] = None
+# process-pool plumbing: globals installed by the initializer (fork/spawn).
+# Workers receive a ByteSource *handle*, not the corpus: a shard-backed
+# source ships only its directory path and each worker mmaps the shards
+# itself, so no corpus bytes ever cross the pool boundary.
+_PROC_SOURCE = None
 _PROC_DECODE: Optional[Callable] = None
 
 
-def _proc_init(files, path_name):
-    global _PROC_FILES, _PROC_DECODE
+def _proc_init(handle, path_name):
+    global _PROC_SOURCE, _PROC_DECODE
     from repro.codecs import get_decoder
-    _PROC_FILES = files
+    _PROC_SOURCE = handle.open()
     _PROC_DECODE = get_decoder(path_name).fn
 
 
 def _proc_work(i):
     try:
-        return i, _PROC_DECODE(_PROC_FILES[i]), None
+        return i, _PROC_DECODE(_PROC_SOURCE[i]), None
     except (UnsupportedJpeg, CorruptJpeg) as e:
         return i, None, f"{type(e).__name__}: {e}"
 
 
 class DataLoader:
-    """Iterable over batches: dict(image [B,H,W,3] u8, label [B] i32)."""
+    """Iterable over batches: dict(image [B,H,W,3] u8, label [B] i32).
 
-    def __init__(self, files: Sequence[bytes], labels: Sequence[int],
+    ``files`` is either the paper's in-memory ``Sequence[bytes]`` or any
+    ``repro.store.ByteSource`` (e.g. a mmap-backed ``ShardSource``); a
+    ByteSource carries its own labels, so pass ``labels=None`` then.
+    """
+
+    def __init__(self, files, labels: Optional[Sequence[int]] = None,
                  decode_fn: Optional[Callable[[bytes], np.ndarray]] = None,
                  cfg: Optional[LoaderConfig] = None, *,
                  path_name: Optional[str] = None,
                  batch_decode_fn: Optional[Callable] = None):
-        self.files = files
-        self.labels = np.asarray(labels, np.int32)
+        if labels is None and not hasattr(files, "open_in_worker"):
+            # a plain sequence has no labels of its own: silently
+            # training on the MemorySource zero-fill would be a footgun
+            raise ValueError(
+                "labels are required with a plain bytes sequence; only a "
+                "ByteSource (which carries its own) may omit them")
+        self.source = as_byte_source(files, labels)
+        self.files = self.source
+        self.labels = np.asarray(self.source.labels, np.int32)
         self.cfg = cfg or LoaderConfig()
         self.path_name = path_name
         self.decode_fn = decode_fn
@@ -142,6 +163,8 @@ class DataLoader:
         self.epoch = 0
         self.cursor = 0
         self._latencies: List[float] = []
+        self._pool = None                # process mode: reused across epochs
+        self._pool_finalizer = None
 
     # ------------------------------------------------------------ state
     def stats(self) -> Dict[str, Any]:
@@ -173,11 +196,19 @@ class DataLoader:
         # the permutation is a pure function of (seed, epoch): a restored
         # loader regenerates the interrupted epoch's exact order and
         # resumes at the cursor, instead of re-drawing from a mutable RNG
-        # (which replayed/dropped items when resuming a shuffled epoch)
+        # (which replayed/dropped items when resuming a shuffled epoch).
+        # shuffle_window > 0 swaps the full permutation for the streaming
+        # window shuffle (same purity contract, storage-friendly locality)
         idx = np.arange(len(self.files))
         idx = idx[self.cfg.shard_index::self.cfg.shard_count]
         if self.cfg.shuffle:
-            np.random.RandomState([self.cfg.seed, self.epoch]).shuffle(idx)
+            if self.cfg.shuffle_window > 0:
+                idx = idx[window_shuffle_order(
+                    len(idx), self.cfg.seed, self.epoch,
+                    self.cfg.shuffle_window)]
+            else:
+                np.random.RandomState(
+                    [self.cfg.seed, self.epoch]).shuffle(idx)
         return idx
 
     # ------------------------------------------------------------ decode
@@ -315,8 +346,38 @@ class DataLoader:
         finally:
             ex.shutdown(wait=False, cancel_futures=True)
 
+    def _proc_initargs(self) -> tuple:
+        """What crosses the pool boundary: a ByteSource worker handle and
+        the decode-path name — never the corpus. A shard-backed handle is
+        a directory path (picklable in ~100 bytes however large the
+        corpus); workers reopen the shards with their own mmaps."""
+        return (self.source.open_in_worker(), self.path_name)
+
+    def _ensure_pool(self):
+        """The fork pool, created once and reused across epochs (it used
+        to be rebuilt — and the whole corpus re-materialized into
+        initargs via ``list(self.files)`` — per epoch)."""
+        if self._pool is None:
+            import multiprocessing as mp
+            ctx = mp.get_context("fork")
+            self._pool = ctx.Pool(self.cfg.num_workers,
+                                  initializer=_proc_init,
+                                  initargs=self._proc_initargs())
+            # reclaim worker processes when the loader is dropped without
+            # an explicit close() (runs at GC or interpreter exit)
+            self._pool_finalizer = weakref.finalize(
+                self, self._pool.terminate)
+        return self._pool
+
+    def close(self) -> None:
+        """Release the process pool (no-op for thread/inline modes)."""
+        if self._pool is not None:
+            self._pool_finalizer.detach()
+            self._pool.terminate()
+            self._pool.join()
+            self._pool = None
+
     def _iter_decoded_procs(self, order):
-        import multiprocessing as mp
         assert self.path_name is not None, \
             "process mode needs a registered path name"
         from repro.codecs import ExecContext, eligible, get_decoder
@@ -326,17 +387,15 @@ class DataLoader:
             raise RuntimeError(
                 f"decode path {self.path_name!r} is "
                 f"{verdict.reason}")
-        ctx = mp.get_context("fork")
-        with ctx.Pool(self.cfg.num_workers, initializer=_proc_init,
-                      initargs=(list(self.files), self.path_name)) as pool:
-            for i, img, err in pool.imap(
-                    _proc_work, [int(i) for i in order],
-                    chunksize=max(1, self.cfg.prefetch)):
-                if err is not None:
-                    self.ledger.record(i, err)
-                    yield i, None
-                else:
-                    yield i, img
+        pool = self._ensure_pool()
+        for i, img, err in pool.imap(
+                _proc_work, [int(i) for i in order],
+                chunksize=max(1, self.cfg.prefetch)):
+            if err is not None:
+                self.ledger.record(i, err)
+                yield i, None
+            else:
+                yield i, img
 
     # ------------------------------------------------------------ iterate
     def __iter__(self):

@@ -21,7 +21,11 @@ class BitReader:
     def __init__(self, data: bytes):
         # destuff 0xFF00 -> 0xFF; restart markers are split out *before*
         # the reader sees the bytes (see _restart_segments), so the only
-        # 0xFF sequences left inside a segment are stuffed data bytes
+        # 0xFF sequences left inside a segment are stuffed data bytes.
+        # mmap-backed sources hand us memoryviews; destuffing copies
+        # regardless, so materializing here costs nothing extra.
+        if not isinstance(data, (bytes, bytearray)):
+            data = bytes(data)
         self.data = data.replace(b"\xff\x00", b"\xff")
         self.n = len(self.data)
         self.pos = 0

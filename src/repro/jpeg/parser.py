@@ -54,6 +54,11 @@ class DecodeSpec:
 def parse(data: bytes, headers_only: bool = False) -> DecodeSpec:
     """Parse a JFIF stream into a DecodeSpec.
 
+    ``data`` is any bytes-like buffer — ``bytes`` or a zero-copy
+    ``memoryview`` served by ``repro.store`` shard readers; header
+    parsing never copies the payload (``scan_data`` stays a view into
+    the caller's buffer until entropy decode destuffs it).
+
     ``headers_only=True`` stops at SOS without scanning the entropy-coded
     data (``scan_data`` is left empty). The O(file-size) entropy scan is
     the bulk of parse time on large files; admission-time callers that

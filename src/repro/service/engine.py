@@ -156,8 +156,13 @@ class DecodeService:
         self.stop(graceful=not any(exc))
 
     # ------------------------------------------------------------ submit
-    def submit(self, data: bytes, client: str = "anon") -> Future:
+    def submit(self, data, client: str = "anon") -> Future:
         """Enqueue one decode; returns a Future of RGB uint8 [H, W, 3].
+
+        ``data`` is any bytes-like buffer: ``bytes``, or a zero-copy
+        ``memoryview`` straight out of a ``repro.store`` shard mmap —
+        admission hashing, header probing, and decode all read the
+        buffer in place.
 
         Raises ServiceOverloaded when shed at admission, ServiceShutdown
         after close. Never blocks the caller on service-side queues.
@@ -194,9 +199,20 @@ class DecodeService:
                 self._inbound.put(req)
         return fut
 
-    def decode(self, data: bytes, client: str = "anon") -> np.ndarray:
+    def decode(self, data, client: str = "anon") -> np.ndarray:
         """Blocking convenience wrapper around submit()."""
         return self.submit(data, client).result()
+
+    def submit_source(self, source, index: int,
+                      client: str = "anon") -> Future:
+        """Submit record ``index`` of a ``repro.store.ByteSource``.
+
+        For shard-backed sources the record travels as a ``memoryview``
+        into the source's mmap — storage to decode worker without a
+        single intermediate copy (the destuffing inside entropy decode
+        is the first and only materialization).
+        """
+        return self.submit(source[index], client)
 
     # ------------------------------------------------------------ batcher
     def _batcher_loop(self) -> None:

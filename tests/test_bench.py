@@ -78,16 +78,29 @@ def test_registry_covers_matrix():
     assert len(names) == len(set(names))
     from repro.jpeg.paths import DECODE_PATHS
     singles = {s.path for s in scenarios if s.kind == "single_thread"}
-    assert singles == set(DECODE_PATHS)       # all sixteen paths
+    assert singles == set(DECODE_PATHS)       # every registered path
     loader = [s for s in scenarios if s.kind == "dataloader"]
     assert {s.workers for s in loader} == {0, 2, 4, 8}
     assert {s.mode for s in loader} == {"thread", "process"}
+    # the data-source axis: every loader cell has a shard twin, with the
+    # suffixless name reserved for the paper's from-memory protocol
+    assert {s.source for s in loader} == {"memory", "shard"}
+    by_name = {s.name: s for s in loader}
+    for s in loader:
+        if s.source == "memory":
+            twin = by_name[s.name + "/shard"]
+            assert (twin.path, twin.workers, twin.mode) == \
+                (s.path, s.workers, s.mode)
+    # single-thread cells are memory-only by definition
+    assert all(s.source == "memory" for s in scenarios
+               if s.kind == "single_thread")
 
 
 def test_select_scenarios_prefix_and_errors():
     picked = select_scenarios(["loader/numpy-fast"])
     assert picked and all(s.path == "numpy-fast" for s in picked)
-    assert len(picked) == 7                   # w0 + {2,4,8} x {thread,process}
+    # (w0 + {2,4,8} x {thread,process}) x {memory,shard}
+    assert len(picked) == 14
     exact = select_scenarios(["single/jnp-fused"])
     assert [s.name for s in exact] == ["single/jnp-fused"]
     with pytest.raises(BenchSelectionError, match="single/numpy-ref"):
@@ -129,6 +142,27 @@ def test_smoke_sweep_budget_and_completeness(smoke_sweep):
     modes = {(r.workers, r.mode) for r in smoke_sweep.records
              if r.protocol == "dataloader" and r.ok}
     assert (2, "thread") in modes and (2, "process") in modes
+
+
+def test_smoke_sweep_measures_shard_cell_and_memory_twin(smoke_sweep):
+    """The storage-backed acceptance pair: the shard cell and its memory
+    twin are both *measured* records, the shard cell names its manifest
+    (uploaded with the CI artifacts), and the recorded fingerprint
+    proves both cells decoded byte-identical corpora."""
+    by_name = {r.scenario: r for r in smoke_sweep.records}
+    shard = by_name["loader/numpy-fast/w2/process/shard"]
+    mem = by_name["loader/numpy-fast/w2/process"]
+    assert shard.ok and mem.ok
+    assert shard.meta["source"] == "shard" and mem.meta["source"] == "memory"
+    assert shard.throughput_mean > 0 and mem.throughput_mean > 0
+    assert os.path.exists(shard.meta["shard_manifest"])
+    from repro.jpeg.corpus import build_corpus, corpus_fingerprint
+    prof = PROFILES["smoke"]
+    want = corpus_fingerprint(build_corpus(prof.corpus_n,
+                                           seed=prof.corpus_seed))
+    assert shard.meta["corpus_fingerprint"] == want
+    # same delivery on both sides of the source axis
+    assert shard.meta["delivered"] == mem.meta["delivered"]
 
 
 def test_smoke_sweep_artifacts_validate(smoke_sweep):

@@ -43,15 +43,18 @@ def test_open_decoder_enforces_context():
 
 
 def test_list_decoders_context_filter_is_resolver_backed():
+    from repro.codecs import contrib
     forkable = {s.name for s in
                 list_decoders(context=ExecContext.PROCESS_POOL)}
     assert forkable == {n for n in decoder_names()
                         if eligible(get_decoder(n).caps,
                                     ExecContext.PROCESS_POOL)}
+    # the numpy family + whatever real-backend contrib plugins imported
+    # (C extensions with no jax state are fork-safe too)
     assert {s.name for s in list_decoders(context=ExecContext.PROCESS_POOL,
                                           strict=False)} \
         == {"numpy-ref", "numpy-fast", "numpy-int", "numpy-sparse",
-            "fft-idct"}
+            "fft-idct"} | set(contrib.available())
 
 
 # ------------------------------------------------------------------ sessions
@@ -155,6 +158,52 @@ def test_plugin_runs_through_protocols(corpus, plugin):
 def test_unregister_unknown_decoder_raises():
     with pytest.raises(KeyError):
         unregister_decoder("never-registered")
+
+
+# ------------------------------------------------- contrib real backends
+def _contrib_names():
+    from repro.codecs import contrib
+    return contrib.available()
+
+
+@pytest.mark.parametrize("name", ["pillow", "opencv"])
+def test_contrib_backend_decodes_corpus(corpus, name):
+    """Pillow/OpenCV registered as out-of-tree-style plugins: decode the
+    whole synthetic corpus (incl. the rare YCCK member) to RGB uint8 of
+    the same shape the built-in decoders produce, and qualify for the
+    forked pool (real C extensions, no jax state)."""
+    if name not in _contrib_names():
+        pytest.skip(f"{name} not importable in this environment")
+    spec = get_decoder(name)
+    assert spec.caps.fork_safe and not spec.caps.strict
+    assert eligible(spec.caps, ExecContext.PROCESS_POOL)
+    ref = get_decoder("numpy-ref")
+    for i, f in enumerate(corpus.files):
+        img = spec.fn(f)
+        assert img.dtype == np.uint8 and img.ndim == 3
+        want = ref.fn(f)
+        assert img.shape == want.shape, i
+        if i == corpus.rare_index:
+            continue    # YCCK inversion conventions legitimately diverge
+        # real libjpeg pipelines use fancy chroma upsampling etc.; agree
+        # loosely with our reference, not bit-exactly
+        err = np.abs(img.astype(int) - want.astype(int)).max()
+        assert err <= 32, (name, i, err)
+
+
+def test_contrib_backends_in_open_full_profile_only():
+    """The full profile (selection None = open) sweeps contrib cells;
+    smoke/quick select the built-in engine families, so contrib cells
+    appear there as explicit skips, never silently vanish."""
+    if not _contrib_names():
+        pytest.skip("no contrib backend importable")
+    from repro.bench import PROFILES, build_registry
+    name = _contrib_names()[0]
+    cells = [s for s in build_registry() if s.path == name]
+    assert {s.kind for s in cells} >= {"single_thread", "dataloader"}
+    for s in cells:
+        assert PROFILES["full"].wants(s)[0]
+        assert not PROFILES["smoke"].wants(s)[0]
 
 
 # ------------------------------------------------------------------- shims

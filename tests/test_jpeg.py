@@ -49,6 +49,12 @@ def test_all_paths_agree_with_oracle(corpus):
     for i, f in enumerate(corpus.files):
         refs[i] = oracle.decode(f)
     for name, path in DECODE_PATHS.items():
+        if path.engine not in ("numpy", "jnp", "pallas"):
+            # contrib real backends (pillow/opencv) implement their own
+            # IDCT/upsampling/YCCK choices; their looser agreement bound
+            # is pinned in tests/test_codecs.py, not this sweep, which
+            # checks that OUR engines implement identical math
+            continue
         skips = []
         for i, f in enumerate(corpus.files):
             try:

@@ -278,14 +278,17 @@ def test_strict_path_falls_back_and_records_skip(corpus):
 
 
 def test_list_paths_query_helper():
+    from repro.codecs import contrib
     assert {p.name for p in list_paths()} == set(DECODE_PATHS)
     for p in list_paths(strict=True):
         assert p.strict
     for p in list_paths(process_eligible=True):
-        assert p.process_eligible and p.engine == "numpy"
+        # fork-safe = numpy family + contrib C-extension backends
+        assert p.process_eligible and p.engine in (
+            "numpy", "pillow", "opencv")
     assert {p.name for p in list_paths(process_eligible=True, strict=False)} \
         == {"numpy-ref", "numpy-fast", "numpy-int", "numpy-sparse",
-            "fft-idct"}
+            "fft-idct"} | set(contrib.available())
 
 
 # -------------------------------------------------------------------- cache

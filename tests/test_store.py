@@ -1,0 +1,223 @@
+"""Sharded corpus store: writer/reader round-trip, corruption typing,
+ByteSource contract across the loader (thread + process, zero-copy
+worker handles), window-shuffle sampler determinism, and mid-epoch
+checkpoint/resume parity between shard-backed and in-memory loaders."""
+import glob
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.data.loader import DataLoader, LoaderConfig
+from repro.jpeg.corpus import (corpus_fingerprint, load_corpus_shards,
+                               write_corpus_shards)
+from repro.store import (MemorySource, ShardCorruption, ShardError,
+                         ShardReader, ShardSource, WindowShuffleSampler,
+                         as_byte_source, window_shuffle_order)
+
+DECODE = "numpy-fast"
+
+
+@pytest.fixture(scope="module")
+def shard_dir(tmp_path_factory, corpus):
+    root = str(tmp_path_factory.mktemp("shards"))
+    write_corpus_shards(corpus, root, shard_size=5)
+    return root
+
+
+def mkloader(files, labels=None, **kw):
+    kw.setdefault("batch_size", 4)
+    return DataLoader(files, labels, cfg=LoaderConfig(**kw),
+                      path_name=DECODE)
+
+
+# ------------------------------------------------------------- round trip
+def test_writer_reader_round_trip_byte_identical(corpus, shard_dir):
+    """Every record — including the rare YCCK member — comes back as a
+    zero-copy memoryview over the exact ingested bytes, with its label;
+    the manifest fingerprint matches the source corpus."""
+    src = load_corpus_shards(shard_dir)
+    assert len(src) == len(corpus.files)
+    for i in range(len(src)):
+        view = src[i]
+        assert isinstance(view, memoryview)
+        assert bytes(view) == corpus.files[i], i
+        assert src.label(i) == int(corpus.labels[i])
+    assert bytes(src[corpus.rare_index]) == corpus.files[corpus.rare_index]
+    assert src.fingerprint == corpus_fingerprint(corpus)
+    assert src.meta["rare_index"] == corpus.rare_index
+    assert len(glob.glob(os.path.join(shard_dir, "shard_*.bin"))) > 1
+    src.close()
+
+
+def test_record_corruption_raises_typed_error(corpus, tmp_path):
+    root = str(tmp_path / "shards")
+    write_corpus_shards(corpus, root, shard_size=100)
+    shard = glob.glob(os.path.join(root, "shard_*.bin"))[0]
+    with open(shard, "r+b") as f:
+        f.seek(40)                        # inside record 0's payload
+        byte = f.read(1)
+        f.seek(40)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    src = ShardSource(root)
+    with pytest.raises(ShardCorruption, match="crc32"):
+        src[0]
+    # a different record in the same shard still verifies
+    assert bytes(src[len(src) - 1]) == corpus.files[len(src) - 1]
+    src.close()
+
+
+def test_truncated_shard_raises_at_open(corpus, tmp_path):
+    root = str(tmp_path / "shards")
+    write_corpus_shards(corpus, root, shard_size=100)
+    shard = glob.glob(os.path.join(root, "shard_*.bin"))[0]
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) - 7)
+    with pytest.raises(ShardCorruption, match="truncated"):
+        ShardReader(shard)
+
+
+def test_missing_manifest_is_shard_error(tmp_path):
+    with pytest.raises(ShardError, match="manifest"):
+        ShardSource(str(tmp_path))
+
+
+# ---------------------------------------------------------------- sampler
+def test_window_shuffle_is_pure_function_of_seed_epoch():
+    a = window_shuffle_order(40, seed=3, epoch=1, window=8)
+    b = window_shuffle_order(40, seed=3, epoch=1, window=8)
+    assert (a == b).all()
+    assert sorted(a) == list(range(40))           # a permutation
+    assert list(a) != list(window_shuffle_order(40, 3, 2, 8))
+    assert list(a) != list(window_shuffle_order(40, 4, 1, 8))
+    # window=1 is sequential; window>=n is a full shuffle's support
+    assert list(window_shuffle_order(10, 0, 0, 1)) == list(range(10))
+
+
+def test_sampler_stream_matches_order_and_restores_mid_epoch():
+    s = WindowShuffleSampler(30, seed=9, window=5)
+    want = list(window_shuffle_order(30, 9, 0, 5))
+    assert [next(s) for _ in range(30)] == want
+    # epoch auto-advance draws the next epoch's permutation
+    assert [next(s) for _ in range(30)] == \
+        list(window_shuffle_order(30, 9, 1, 5))
+
+    s2 = WindowShuffleSampler(30, seed=9, window=5)
+    head = [next(s2) for _ in range(11)]
+    state = s2.state()
+    assert all(isinstance(v, int) for v in state.values())
+    s3 = WindowShuffleSampler(30, seed=1, window=5)
+    s3.restore(state)
+    rest = [next(s3) for _ in range(19)]
+    assert [next(s2) for _ in range(19)] == rest
+    assert sorted(head + rest) == list(range(30))   # exactly one epoch
+
+
+def test_sampler_state_round_trips_through_checkpoint_manager(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    s = WindowShuffleSampler(25, seed=4, window=6)
+    for _ in range(13):
+        next(s)
+    mgr = CheckpointManager(str(tmp_path))
+    # numpy scalars in extras must survive msgpack (manager coerces)
+    extra = {"sampler": s.state(), "np_scalar": np.int64(13)}
+    mgr.save(1, {"w": np.zeros(2)}, extra=extra)
+    _, _, back = mgr.restore_latest(like={"w": np.zeros(2)})
+    assert back["np_scalar"] == 13
+    s2 = WindowShuffleSampler(25, seed=0, window=6)
+    s2.restore(back["sampler"])
+    assert [next(s) for _ in range(12)] == [next(s2) for _ in range(12)]
+
+
+# ----------------------------------------------------- loader integration
+def test_shard_loader_batches_byte_identical_to_memory(corpus, shard_dir):
+    mem = mkloader(corpus.files, corpus.labels)
+    shard = mkloader(load_corpus_shards(shard_dir))
+    batches = list(zip(mem, shard))
+    assert batches
+    for bm, bs in batches:
+        np.testing.assert_array_equal(bm["image"], bs["image"])
+        np.testing.assert_array_equal(bm["label"], bs["label"])
+
+
+def test_shard_loader_thread_pool_delivers_everything(corpus, shard_dir):
+    dl = mkloader(load_corpus_shards(shard_dir), num_workers=2)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(corpus.files)
+
+
+def test_process_workers_open_shard_by_path(corpus, shard_dir):
+    """The acceptance criterion: process-mode workers reopen the shard
+    via its path handle — the initargs that cross the pool boundary
+    contain no corpus bytes and pickle to O(100) bytes regardless of
+    corpus size."""
+    dl = mkloader(load_corpus_shards(shard_dir), num_workers=2,
+                  mode="process")
+    handle, path_name = dl._proc_initargs()
+    blob = pickle.dumps((handle, path_name))
+    assert len(blob) < 512
+    for probe in corpus.files[:3]:
+        assert probe[:24] not in blob         # no record payload leaked
+    # ...and the pool actually decodes through that handle
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(corpus.files)
+    dl.close()
+
+
+def test_process_pool_reused_across_epochs(corpus, shard_dir):
+    dl = mkloader(load_corpus_shards(shard_dir), num_workers=2,
+                  mode="process")
+    for b in dl:
+        pass
+    pool_first = dl._pool
+    assert pool_first is not None             # hoisted, not per-epoch
+    for b in dl:
+        pass
+    assert dl._pool is pool_first             # same pool on epoch 2
+    dl.close()
+    assert dl._pool is None
+
+
+def test_mid_epoch_resume_parity_shard_vs_memory(corpus, shard_dir):
+    """Window-shuffled epochs are a pure function of (seed, epoch), so a
+    checkpoint taken from a shard-backed loader restores into an
+    in-memory loader (and vice versa) with the identical remainder."""
+    kw = dict(shuffle=True, shuffle_window=4, seed=11)
+    a = mkloader(load_corpus_shards(shard_dir), **kw)
+    it = iter(a)
+    seen = list(next(it)["label"])
+    state = a.state()
+    rest_shard = [lab for b in it for lab in b["label"]]
+
+    m = mkloader(corpus.files, corpus.labels, **kw)
+    m.restore(state)
+    rest_mem = [lab for b in m for lab in b["label"]]
+    np.testing.assert_array_equal(rest_shard, rest_mem)
+    assert sorted(seen + rest_mem) == sorted(corpus.labels)
+
+
+# ----------------------------------------------------- service integration
+def test_service_submit_source_zero_copy(corpus, shard_dir):
+    from repro.service import DecodeService, ServiceConfig
+    src = load_corpus_shards(shard_dir)
+    with DecodeService(ServiceConfig(num_workers=0,
+                                     cache_bytes=0)) as svc:
+        img = svc.submit_source(src, 0).result()
+    ref = mkloader(corpus.files, corpus.labels)  # reuse registered decode
+    np.testing.assert_array_equal(img, ref.decode_fn(corpus.files[0]))
+    src.close()
+
+
+def test_as_byte_source_contract():
+    files = [b"aa", b"bb"]
+    src = as_byte_source(files, [1, 2])
+    assert isinstance(src, MemorySource)
+    assert len(src) == 2 and src[1] == b"bb" and src.label(0) == 1
+    assert as_byte_source(src) is src
+    with pytest.raises(ValueError, match="labels"):
+        as_byte_source(src, [1, 2])
+    # a plain sequence without labels must fail loudly, not train on the
+    # MemorySource zero-fill
+    with pytest.raises(ValueError, match="labels are required"):
+        DataLoader(files, None, path_name=DECODE)
