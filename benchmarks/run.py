@@ -64,6 +64,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="existing shard-ingest directory for "
                          "source=shard cells (default: ingest into "
                          "<out>/shards on first touch)")
+    sw.add_argument("--trace", action="store_true",
+                    help="attach a repro.obs tracer to every measured "
+                         "cell: writes trace_<profile>.json (Chrome "
+                         "trace-event / Perfetto) next to the records "
+                         "and a meta.stage_s breakdown per record")
 
     ig = sub.add_parser("ingest",
                         help="write a profile corpus as repro.store "
@@ -102,6 +107,8 @@ def cmd_sweep(args) -> int:
         kw["out_dir"] = args.out
     if args.shards:
         kw["shard_dir"] = args.shards
+    if args.trace:
+        kw["trace"] = True
     try:
         res = run_sweep(_profile_from_flags(args), only=only, **kw)
     except BenchSelectionError as e:
@@ -119,6 +126,8 @@ def cmd_sweep(args) -> int:
           file=sys.stderr)
     if res.out_dir:
         print(f"# records: {res.files[0]}", file=sys.stderr)
+    if res.trace_path:
+        print(f"# trace: {res.trace_path}", file=sys.stderr)
     return 1 if errors else 0
 
 

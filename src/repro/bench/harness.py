@@ -36,6 +36,7 @@ from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
 from repro.core.schema import RunRecord, save_records, validate_record
 from repro.jpeg.corpus import (build_corpus, corpus_fingerprint,
                                load_corpus_shards, write_corpus_shards)
+from repro.obs import trace as obs_trace
 from repro.store import ShardError, manifest_path
 
 DEFAULT_OUT = os.path.join("artifacts", "bench")
@@ -48,6 +49,7 @@ class SweepResult:
     elapsed_s: float
     out_dir: Optional[str]
     files: List[str]
+    trace_path: Optional[str] = None
 
     def ok_records(self) -> List[RunRecord]:
         return [r for r in self.records if r.ok]
@@ -222,6 +224,7 @@ def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
               out_dir: Optional[str] = DEFAULT_OUT,
               shard_dir: Optional[str] = None,
               platform: str = "live-host",
+              trace: bool = False,
               progress=None) -> SweepResult:
     """Execute the scenario matrix under ``profile``.
 
@@ -236,6 +239,13 @@ def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
     already holds a matching ingest (``benchmarks/run.py ingest``), else
     ingested on first touch into ``<out_dir>/shards`` (a temp dir when
     ``out_dir`` is None).
+
+    ``trace=True`` attaches a ``repro.obs`` tracer to every measured
+    cell: each measured record's ``meta.stage_s`` carries the per-stage
+    wall-time breakdown (parse/entropy/transform/queue-wait/...), and
+    the merged Chrome trace-event artifact ``trace_<profile>.json`` —
+    loader-worker process timelines aligned against the main process —
+    is written next to the record JSON (Perfetto-loadable).
     """
     if profile not in PROFILES:
         raise ValueError(f"unknown profile {profile!r}; "
@@ -245,6 +255,15 @@ def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
     ctx = _SweepContext(prof, platform, out_dir=out_dir,
                         shard_dir=shard_dir)
     records: List[RunRecord] = []
+    trace_events: List[dict] = []
+    trace_tmp = None
+    trace_root = None
+    if trace:
+        if out_dir:
+            trace_root = os.path.join(out_dir, "trace_shards")
+        else:
+            trace_tmp = tempfile.TemporaryDirectory(prefix="bench-trace-")
+            trace_root = trace_tmp.name
     t_start = time.perf_counter()
     try:
         for s in scenarios:
@@ -252,15 +271,33 @@ def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
             if not run_it:
                 records.append(_skip_record(s, reason, platform))
                 continue
+            tracer = None
+            if trace:
+                # one tracer (and shard dir) per cell: pool workers of
+                # one scenario can never bleed spans into another's
+                # stage_s accounting
+                tracer = obs_trace.Tracer(shard_dir=os.path.join(
+                    trace_root, _scenario_file(s.name)[:-len(".json")]))
             t0 = time.perf_counter()
             try:
-                rec = _run_scenario(s, ctx)
+                if tracer is not None:
+                    with obs_trace.use_tracer(tracer):
+                        rec = _run_scenario(s, ctx)
+                else:
+                    rec = _run_scenario(s, ctx)
                 # ineligible cells (e.g. jax paths x process pool) already
                 # arrive as schema "skipped" records from the protocols —
                 # everything else measured is ok
                 rec.meta.setdefault("status", "ok")
                 rec.meta["scenario"] = s.name
-                rec.meta["elapsed_s"] = round(time.perf_counter() - t0, 3)
+                # 6 decimals: single-image smoke cells finish in well
+                # under a millisecond — 3 decimals erased them entirely
+                rec.meta["elapsed_s"] = round(time.perf_counter() - t0, 6)
+                if tracer is not None:
+                    cell_events = tracer.collect()
+                    rec.meta["stage_s"] = obs_trace.stage_seconds(
+                        cell_events)
+                    trace_events.extend(cell_events)
             except Exception as e:             # noqa: BLE001 — isolate cell
                 rec = _error_record(s, e, platform)
             validate_record(rec.to_json())
@@ -269,12 +306,19 @@ def run_sweep(profile: str = "quick", *, only: Optional[List[str]] = None,
                 progress(s, rec)
     finally:
         ctx.close()
+        if trace_tmp is not None:
+            trace_tmp.cleanup()
     elapsed = time.perf_counter() - t_start
     files = []
+    trace_path = None
     if out_dir:
-        files = _save(records, prof, elapsed, out_dir)
+        files = _save(records, prof, elapsed, out_dir,
+                      trace_events=trace_events if trace else None)
+        if trace:
+            trace_path = files[-1]
     return SweepResult(profile=profile, records=records,
-                       elapsed_s=elapsed, out_dir=out_dir, files=files)
+                       elapsed_s=elapsed, out_dir=out_dir, files=files,
+                       trace_path=trace_path)
 
 
 # ---------------------------------------------------------------- artifacts
@@ -283,7 +327,8 @@ def _scenario_file(name: str) -> str:
 
 
 def _save(records: List[RunRecord], prof: Profile, elapsed: float,
-          out_dir: str) -> List[str]:
+          out_dir: str,
+          trace_events: Optional[List[dict]] = None) -> List[str]:
     os.makedirs(os.path.join(out_dir, "scenarios"), exist_ok=True)
     files = []
 
@@ -320,6 +365,13 @@ def _save(records: List[RunRecord], prof: Profile, elapsed: float,
     with open(rp, "w") as f:
         f.write(render_report(records, summary))
     files.append(rp)
+
+    if trace_events is not None:
+        # last element by contract: run_sweep reads files[-1] as the
+        # trace artifact path
+        tp = os.path.join(out_dir, f"trace_{prof.name}.json")
+        obs_trace.write_chrome_trace(tp, trace_events)
+        files.append(tp)
     return files
 
 
@@ -345,6 +397,11 @@ def render_report(records: List[RunRecord], summary: dict) -> str:
         f"numpy {host['numpy']}",
         f"Wall clock: {summary['elapsed_s']:.1f}s "
         f"(budget {summary['budget_s']:.0f}s)",
+        "",
+        "*Per-stage timelines: re-run with `benchmarks/run.py sweep "
+        "--trace` to get `trace_<profile>.json` (Chrome trace-event "
+        "format; open in Perfetto or chrome://tracing) plus a "
+        "`meta.stage_s` breakdown on every measured record.*",
         "",
         "## Scenario status",
         report.status_report(records),

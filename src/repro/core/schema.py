@@ -137,6 +137,21 @@ def validate_record(d: dict) -> dict:
     status = d.get("meta", {}).get("status", "ok")
     if status not in STATUSES:
         raise SchemaError(f"meta.status {status!r} not in {STATUSES}")
+    stage_s = d.get("meta", {}).get("stage_s")
+    if stage_s is not None:
+        # traced sweeps attach a per-stage wall-time breakdown; keep it
+        # machine-checkable so downstream stage attribution can trust it
+        if not isinstance(stage_s, dict):
+            raise SchemaError(
+                f"meta.stage_s: expected object, got {stage_s!r}")
+        for k, v in stage_s.items():
+            if not isinstance(k, str):
+                raise SchemaError(f"meta.stage_s: non-string stage {k!r}")
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v < 0:
+                raise SchemaError(
+                    f"meta.stage_s[{k!r}]: expected non-negative "
+                    f"number, got {v!r}")
     return d
 
 

@@ -38,6 +38,24 @@ def noise_gate(samples_a: Sequence[float], samples_b: Sequence[float],
     return z * float(np.sqrt(cv_a ** 2 + cv_b ** 2))
 
 
+def percentile(samples: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile over raw samples, ``p`` in [0, 1].
+
+    The smallest sample with at least ``p`` of the mass at or below it:
+    rank ``ceil(p * n)`` (1-based), so p50 of two samples is the
+    *smaller* one — unlike the old ``int(p * n)`` indexing, which was
+    biased one rank high on small windows. Empty input reads 0.0. The
+    one percentile definition shared by ``DataLoader.stats()`` and the
+    ``repro.obs`` histogram quantiles."""
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"p must be in [0, 1], got {p}")
+    s = sorted(samples)
+    if not s:
+        return 0.0
+    rank = max(1, int(np.ceil(p * len(s))))
+    return float(s[rank - 1])
+
+
 def mean_std(samples: Sequence[float]) -> Tuple[float, float]:
     a = np.asarray(samples, dtype=np.float64)
     if a.size == 0:                 # defined value, not NaN + RuntimeWarning

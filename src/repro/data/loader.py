@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
+from repro.obs import trace
 from repro.store.sampler import window_shuffle_order
 from repro.store.source import as_byte_source
 
@@ -108,18 +109,28 @@ _PROC_SOURCE = None
 _PROC_DECODE: Optional[Callable] = None
 
 
-def _proc_init(handle, path_name):
+def _proc_init(handle, path_name, trace_cfg=None):
     global _PROC_SOURCE, _PROC_DECODE
     from repro.codecs import get_decoder
+    # a tracing parent hands each worker a shard config: worker spans
+    # land in per-pid trace shards the parent's export merges
+    trace.init_worker(trace_cfg)
     _PROC_SOURCE = handle.open()
     _PROC_DECODE = get_decoder(path_name).fn
 
 
 def _proc_work(i):
     try:
-        return i, _PROC_DECODE(_PROC_SOURCE[i]), None
+        with trace.span("loader.fetch"):
+            data = _PROC_SOURCE[i]
+        with trace.span("loader.decode"):
+            out = i, _PROC_DECODE(data), None
     except (UnsupportedJpeg, CorruptJpeg) as e:
-        return i, None, f"{type(e).__name__}: {e}"
+        out = i, None, f"{type(e).__name__}: {e}"
+    # per-item flush: pool workers die by terminate(), never by a clean
+    # shutdown hook, so buffered spans must not outlive the item
+    trace.flush()
+    return out
 
 
 class DataLoader:
@@ -171,14 +182,12 @@ class DataLoader:
         """Operational snapshot for bench records: per-item decode latency
         percentiles (whatever the worker saw, including queueing inside a
         chunk) plus skip accounting."""
-        lat = sorted(self._latencies)
-
-        def pct(p: float) -> float:
-            if not lat:
-                return 0.0
-            return lat[min(int(p * len(lat)), len(lat) - 1)]
-
-        return {"latency_p50_s": pct(0.50), "latency_p99_s": pct(0.99),
+        # deferred import: core.protocols imports this module, so a
+        # module-level repro.core import would be circular
+        from repro.core.stats import percentile
+        lat = list(self._latencies)
+        return {"latency_p50_s": percentile(lat, 0.50),
+                "latency_p99_s": percentile(lat, 0.99),
                 "measured_items": len(lat), "skips": self.ledger.count}
 
     def state(self) -> Dict[str, Any]:
@@ -214,7 +223,10 @@ class DataLoader:
     # ------------------------------------------------------------ decode
     def _decode_one(self, i: int):
         try:
-            return self.decode_fn(self.files[i])
+            with trace.span("loader.fetch"):
+                data = self.files[i]
+            with trace.span("loader.decode"):
+                return self.decode_fn(data)
         except (UnsupportedJpeg, CorruptJpeg) as e:
             self.ledger.record(i, f"{type(e).__name__}: {e}")
             return None
@@ -224,7 +236,10 @@ class DataLoader:
         iterator records skips at emission time, so a straggler primary
         racing its backup dispatch cannot double-record one index."""
         try:
-            return self.decode_fn(self.files[i]), None
+            with trace.span("loader.fetch"):
+                data = self.files[i]
+            with trace.span("loader.decode"):
+                return self.decode_fn(data), None
         except (UnsupportedJpeg, CorruptJpeg) as e:
             return None, f"{type(e).__name__}: {e}"
 
@@ -260,20 +275,25 @@ class DataLoader:
                     if budget is not None:
                         waited = time.monotonic() - submit_t[emit]
                         try:
-                            img, err = fut.result(
-                                timeout=max(budget - waited, 1e-3))
+                            with trace.span("loader.queue_wait"):
+                                img, err = fut.result(
+                                    timeout=max(budget - waited, 1e-3))
                         except FutureTimeout:
                             # backup dispatch: race a second attempt
-                            b = backup_ex.submit(
-                                self._decode_quiet, order[emit])
-                            img, err = b.result()
+                            trace.instant("loader.backup_dispatch",
+                                          index=order[emit])
+                            with trace.span("loader.backup_wait"):
+                                b = backup_ex.submit(
+                                    self._decode_quiet, order[emit])
+                                img, err = b.result()
                             fut.cancel()
                         yield from self._emit_one(order[emit], img, err,
                                                   submit_t.pop(emit))
                         del pending[emit]
                         emit += 1
                         continue
-                img, err = fut.result()
+                with trace.span("loader.queue_wait"):
+                    img, err = fut.result()
                 yield from self._emit_one(order[emit], img, err,
                                           submit_t.pop(emit))
                 del pending[emit]
@@ -322,7 +342,10 @@ class DataLoader:
 
         def work(idxs):
             t0 = time.monotonic()
-            return fn([self.files[i] for i in idxs]), t0
+            with trace.span("loader.fetch"):
+                datas = [self.files[i] for i in idxs]
+            with trace.span("loader.decode", chunk=len(idxs)):
+                return fn(datas), t0
 
         try:
             pending: Dict[int, Any] = {}
@@ -332,7 +355,8 @@ class DataLoader:
                 while pos < len(chunks) and len(pending) < inflight:
                     pending[pos] = ex.submit(work, chunks[pos])
                     pos += 1
-                results, t0 = pending.pop(emit).result()
+                with trace.span("loader.queue_wait"):
+                    results, t0 = pending.pop(emit).result()
                 self._note(t0)
                 for i, res in zip(chunks[emit], results):
                     if isinstance(res, (UnsupportedJpeg, CorruptJpeg)):
@@ -351,7 +375,8 @@ class DataLoader:
         the decode-path name — never the corpus. A shard-backed handle is
         a directory path (picklable in ~100 bytes however large the
         corpus); workers reopen the shards with their own mmaps."""
-        return (self.source.open_in_worker(), self.path_name)
+        return (self.source.open_in_worker(), self.path_name,
+                trace.get_tracer().worker_config())
 
     def _ensure_pool(self):
         """The fork pool, created once and reused across epochs (it used
@@ -388,9 +413,17 @@ class DataLoader:
                 f"decode path {self.path_name!r} is "
                 f"{verdict.reason}")
         pool = self._ensure_pool()
-        for i, img, err in pool.imap(
-                _proc_work, [int(i) for i in order],
-                chunksize=max(1, self.cfg.prefetch)):
+        results = iter(pool.imap(
+            _proc_work, [int(i) for i in order],
+            chunksize=max(1, self.cfg.prefetch)))
+        while True:
+            # the consumer-side stall on the pool is the queue-wait the
+            # single-thread protocol never sees
+            with trace.span("loader.queue_wait"):
+                item = next(results, None)
+            if item is None:
+                return
+            i, img, err = item
             if err is not None:
                 self.ledger.record(i, err)
                 yield i, None
@@ -429,12 +462,16 @@ class DataLoader:
             imgs.append(center_fit(img, th, tw))
             labs.append(self.labels[i])
             if len(imgs) == cfg.batch_size:
-                yield {"image": np.stack(imgs),
-                       "label": np.asarray(labs, np.int32)}
+                with trace.span("loader.collate", batch=len(imgs)):
+                    batch = {"image": np.stack(imgs),
+                             "label": np.asarray(labs, np.int32)}
+                yield batch
                 imgs, labs = [], []
         if imgs and not cfg.drop_remainder:
-            yield {"image": np.stack(imgs),
-                   "label": np.asarray(labs, np.int32)}
+            with trace.span("loader.collate", batch=len(imgs)):
+                batch = {"image": np.stack(imgs),
+                         "label": np.asarray(labs, np.int32)}
+            yield batch
         self.epoch += 1
         self.cursor = 0
 

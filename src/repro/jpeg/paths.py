@@ -59,16 +59,19 @@ from repro.codecs import (Capabilities, DecoderSpec, ExecContext, as_spec,
 from repro.jpeg import huffman, pipeline
 from repro.jpeg import parser as P
 from repro.jpeg.parser import UnsupportedJpeg
+from repro.obs import trace
 
 __all__ = ["DECODE_PATHS", "DecodePath", "get_path", "list_paths",
            "UnsupportedJpeg"]
 
 
 def _entropy(data: bytes, strict: bool):
-    spec = P.parse(data)
-    if strict:
-        P.check_strict(spec)
-    coef = huffman.decode_coefficients(spec)
+    with trace.span("jpeg.parse"):
+        spec = P.parse(data)
+        if strict:
+            P.check_strict(spec)
+    with trace.span("jpeg.entropy"):
+        coef = huffman.decode_coefficients(spec)
     return spec, coef
 
 
@@ -139,11 +142,12 @@ def _fft_idct(data: bytes) -> np.ndarray:
         return np.take(v, idx, axis=axis)
 
     planes = []
-    for c in spec.components:
-        q = spec.qtables[c.tq].astype(np.float64)
-        deq = coef[c.cid] * q[None, None]
-        blocks = idct1(idct1(deq, axis=2), axis=3)
-        planes.append(pipeline.assemble_plane_np(blocks) + 128.0)
+    with trace.span("jpeg.dequant_idct"):
+        for c in spec.components:
+            q = spec.qtables[c.tq].astype(np.float64)
+            deq = coef[c.cid] * q[None, None]
+            blocks = idct1(idct1(deq, axis=2), axis=3)
+            planes.append(pipeline.assemble_plane_np(blocks) + 128.0)
     return pipeline.assemble_image(spec, planes)
 
 
@@ -200,12 +204,14 @@ def _pallas_idct(data: bytes, strict: bool = False) -> np.ndarray:
     from repro.kernels import ops
     spec, coef = _entropy(data, strict)
     planes = []
-    for c in spec.components:
-        q = spec.qtables[c.tq].astype(np.float32)
-        deq = (coef[c.cid] * q[None, None]).astype(np.float32)
-        by, bx = deq.shape[:2]
-        blocks = ops.idct8x8(deq.reshape(-1, 64)).reshape(by, bx, 8, 8)
-        planes.append(pipeline.assemble_plane_np(np.asarray(blocks)) + 128.0)
+    with trace.span("jpeg.dequant_idct"):
+        for c in spec.components:
+            q = spec.qtables[c.tq].astype(np.float32)
+            deq = (coef[c.cid] * q[None, None]).astype(np.float32)
+            by, bx = deq.shape[:2]
+            blocks = ops.idct8x8(deq.reshape(-1, 64)).reshape(by, bx, 8, 8)
+            planes.append(
+                pipeline.assemble_plane_np(np.asarray(blocks)) + 128.0)
     return pipeline.assemble_image(spec, planes)
 
 
@@ -213,13 +219,15 @@ def _pallas_fused(data: bytes) -> np.ndarray:
     from repro.kernels import ops
     spec, coef = _entropy(data, False)
     planes = []
-    for c in spec.components:
-        q = spec.qtables[c.tq].astype(np.float32)
-        by, bx = coef[c.cid].shape[:2]
-        blocks = ops.dequant_idct(
-            coef[c.cid].reshape(-1, 64).astype(np.float32), q.reshape(64))
-        planes.append(pipeline.assemble_plane_np(
-            np.asarray(blocks).reshape(by, bx, 8, 8)))
+    with trace.span("jpeg.dequant_idct"):
+        for c in spec.components:
+            q = spec.qtables[c.tq].astype(np.float32)
+            by, bx = coef[c.cid].shape[:2]
+            blocks = ops.dequant_idct(
+                coef[c.cid].reshape(-1, 64).astype(np.float32),
+                q.reshape(64))
+            planes.append(pipeline.assemble_plane_np(
+                np.asarray(blocks).reshape(by, bx, 8, 8)))
     return pipeline.assemble_image(spec, planes, ycbcr_fn=_ycbcr_kernel)
 
 

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.jpeg import tables as T
 from repro.jpeg.parser import DecodeSpec
+from repro.obs import trace
 
 _IDCT64 = T.idct64_matrix().astype(np.float32)    # [64, 64] kron(C.T, C.T)
 
@@ -91,21 +92,27 @@ def assemble_image(spec: DecodeSpec, planes: Sequence[np.ndarray],
     per ``spec.components`` entry, pre-upsample. ``ycbcr_fn`` overrides
     the 3-component conversion (the Pallas paths pass their fused kernel
     wrapper); 1- and 4-component handling is engine-independent.
+
+    The ``jpeg.assemble`` stage span lives here (not at call sites) so
+    every host-side path — numpy, fft, pallas — gets the same
+    attribution for free.
     """
-    hmax = max(c.h for c in spec.components)
-    vmax = max(c.v for c in spec.components)
-    planes = [upsample_np(p, hmax // c.h, vmax // c.v)
-              for p, c in zip(planes, spec.components)]
-    hh = min(p.shape[0] for p in planes)
-    ww = min(p.shape[1] for p in planes)
-    planes = [p[:hh, :ww] for p in planes]
-    if len(planes) == 1:
-        rgb = np.repeat(planes[0][..., None], 3, axis=-1)
-    elif len(planes) == 3:
-        rgb = (ycbcr_fn or ycbcr_to_rgb_np)(*planes)
-    else:
-        rgb = ycck_to_rgb_np(*planes)
-    return finalize_np(np.asarray(rgb, np.float64), spec.height, spec.width)
+    with trace.span("jpeg.assemble"):
+        hmax = max(c.h for c in spec.components)
+        vmax = max(c.v for c in spec.components)
+        planes = [upsample_np(p, hmax // c.h, vmax // c.v)
+                  for p, c in zip(planes, spec.components)]
+        hh = min(p.shape[0] for p in planes)
+        ww = min(p.shape[1] for p in planes)
+        planes = [p[:hh, :ww] for p in planes]
+        if len(planes) == 1:
+            rgb = np.repeat(planes[0][..., None], 3, axis=-1)
+        elif len(planes) == 3:
+            rgb = (ycbcr_fn or ycbcr_to_rgb_np)(*planes)
+        else:
+            rgb = ycck_to_rgb_np(*planes)
+        return finalize_np(np.asarray(rgb, np.float64), spec.height,
+                           spec.width)
 
 
 # ------------------------------------------------------------------ jnp
@@ -161,21 +168,24 @@ def transform_np(spec: DecodeSpec, coef: Dict[int, np.ndarray],
                  fast_idct: bool = True, int_idct: bool = False,
                  sparse_idct: bool = False) -> np.ndarray:
     planes = []
-    for c in spec.components:
-        q = spec.qtables[c.tq].astype(np.float64)
-        deq = coef[c.cid] * q[None, None]
-        if sparse_idct:
-            blocks = idct_blocks_np_sparse(deq)
-        elif int_idct:
-            # libjpeg-islow-style scaled integer IDCT (13-bit fixed point)
-            m = np.round(_IDCT64 * (1 << 13)).astype(np.int64)
-            flat = deq.reshape(-1, 64).astype(np.int64)
-            blocks = ((flat @ m.T) >> 13).reshape(deq.shape).astype(np.float64)
-        elif fast_idct:
-            blocks = idct_blocks_np_fast(deq)
-        else:
-            blocks = idct_blocks_np(deq)
-        planes.append(assemble_plane_np(blocks) + 128.0)
+    with trace.span("jpeg.dequant_idct"):
+        for c in spec.components:
+            q = spec.qtables[c.tq].astype(np.float64)
+            deq = coef[c.cid] * q[None, None]
+            if sparse_idct:
+                blocks = idct_blocks_np_sparse(deq)
+            elif int_idct:
+                # libjpeg-islow-style scaled integer IDCT (13-bit fixed
+                # point)
+                m = np.round(_IDCT64 * (1 << 13)).astype(np.int64)
+                flat = deq.reshape(-1, 64).astype(np.int64)
+                blocks = ((flat @ m.T) >> 13).reshape(
+                    deq.shape).astype(np.float64)
+            elif fast_idct:
+                blocks = idct_blocks_np_fast(deq)
+            else:
+                blocks = idct_blocks_np(deq)
+            planes.append(assemble_plane_np(blocks) + 128.0)
     return assemble_image(spec, planes)
 
 
@@ -303,11 +313,14 @@ def transform_batch(specs: Sequence[DecodeSpec],
     vmax = max(c.v for c in specs[0].components)
     factors = tuple((hmax // c.h, vmax // c.v) for c in specs[0].components)
     TRANSFORM_BATCH_CALLS += 1
-    out = _transform_batch_jit(
-        tuple(jnp.asarray(s) for s in stacked),
-        tuple(jnp.asarray(q) for q in qstacked),
-        n_comp=len(stacked), factors=factors, separable=separable)
-    out = np.asarray(out)
+    # one fused launch: dequant/IDCT/assemble are not separable stages
+    # under jit, so the whole device transform is one span
+    with trace.span("jpeg.transform", batch=len(specs)):
+        out = _transform_batch_jit(
+            tuple(jnp.asarray(s) for s in stacked),
+            tuple(jnp.asarray(q) for q in qstacked),
+            n_comp=len(stacked), factors=factors, separable=separable)
+        out = np.asarray(out)
     return [out[b, :s.height, :s.width] for b, s in enumerate(specs)]
 
 
@@ -321,25 +334,29 @@ def transform_jnp(spec: DecodeSpec, coef: Dict[int, np.ndarray],
                 for c in spec.components)
     factors = tuple((hmax // c.h, vmax // c.v) for c in spec.components)
     if jit:
-        out = _transform_jit(coefs, qts, n_comp=len(coefs), factors=factors,
-                             h=spec.height, w=spec.width,
-                             separable=separable)
-        return np.asarray(out)
+        # fused jit launch: stages are not separable, one transform span
+        with trace.span("jpeg.transform"):
+            out = _transform_jit(coefs, qts, n_comp=len(coefs),
+                                 factors=factors, h=spec.height,
+                                 w=spec.width, separable=separable)
+            return np.asarray(out)
     # unjitted: eager stage-by-stage dispatch (the "wrapper overhead" path)
     planes = []
-    for i, c in enumerate(spec.components):
-        deq = dequant_jnp(coefs[i], qts[i])
-        blocks = (idct_blocks_jnp_separable(deq) if separable
-                  else idct_blocks_jnp(deq))
-        plane = assemble_plane_jnp(blocks) + 128.0
-        planes.append(upsample_jnp(plane, *factors[i]))
-    hh = min(p.shape[0] for p in planes)
-    ww = min(p.shape[1] for p in planes)
-    planes = [p[:hh, :ww] for p in planes]
-    if len(planes) == 1:
-        rgb = jnp.repeat(planes[0][..., None], 3, axis=-1)
-    elif len(planes) == 3:
-        rgb = ycbcr_to_rgb_jnp(*planes)
-    else:
-        rgb = ycck_to_rgb_jnp(*planes)
-    return np.asarray(finalize_jnp(rgb, spec.height, spec.width))
+    with trace.span("jpeg.dequant_idct"):
+        for i, c in enumerate(spec.components):
+            deq = dequant_jnp(coefs[i], qts[i])
+            blocks = (idct_blocks_jnp_separable(deq) if separable
+                      else idct_blocks_jnp(deq))
+            plane = assemble_plane_jnp(blocks) + 128.0
+            planes.append(upsample_jnp(plane, *factors[i]))
+    with trace.span("jpeg.assemble"):
+        hh = min(p.shape[0] for p in planes)
+        ww = min(p.shape[1] for p in planes)
+        planes = [p[:hh, :ww] for p in planes]
+        if len(planes) == 1:
+            rgb = jnp.repeat(planes[0][..., None], 3, axis=-1)
+        elif len(planes) == 3:
+            rgb = ycbcr_to_rgb_jnp(*planes)
+        else:
+            rgb = ycck_to_rgb_jnp(*planes)
+        return np.asarray(finalize_jnp(rgb, spec.height, spec.width))

@@ -1,0 +1,20 @@
+"""Observability: span tracing + metrics for the whole decode stack.
+
+``repro.obs.trace`` — ambient span tracer (Chrome trace-event export,
+per-process shards, Perfetto-loadable merges); ``repro.obs.metrics`` —
+counters/gauges/histograms in a pull-based registry with Prometheus-style
+text exposition. See DESIGN.md §8 for the model and the instrumentation
+map.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry)
+from repro.obs.trace import (NullTracer, Tracer, get_tracer,  # noqa: F401
+                             init_worker, merge_shards, set_tracer, span,
+                             stage_seconds, use_tracer, write_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "NullTracer", "Tracer", "get_tracer", "set_tracer", "use_tracer",
+    "span", "init_worker", "merge_shards", "stage_seconds",
+    "write_chrome_trace",
+]

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.codecs import DecodeOutcome, Decoder, ExecContext, open_decoder
 from repro.jpeg.parser import UnsupportedJpeg
+from repro.obs import trace
 from repro.service.admission import AdmissionController, ServiceOverloaded
 from repro.service.batcher import Batch, MicroBatcher, bucket_key
 from repro.service.cache import DecodeCache, content_key
@@ -177,9 +178,12 @@ class DecodeService:
             img = self.cache.get(key)
             if img is not None:
                 self.metrics.record_cache_hit()
+                trace.instant("service.cache_hit", client=client)
                 fut.set_result(img)
                 return fut
-        ok, reason = self.admission.try_admit(client)
+        with trace.span("service.admission", client=client) as sp:
+            ok, reason = self.admission.try_admit(client)
+            sp.set(admitted=ok)
         if not ok:
             self.metrics.record_shed()
             raise ServiceOverloaded(reason)
@@ -263,23 +267,34 @@ class DecodeService:
                 self._fail(req, ServiceShutdown("aborted"))
             return
         sess = self._session(self.router.pick())
+        tracer = trace.get_tracer()
+        if tracer.enabled:
+            # batcher-queue depth over time: the Perfetto counter track
+            # that shows queueing building up under overload
+            tracer.counter("service.queue_depth", self._queue_depth())
         # ONE decode_batch call per micro-batch: same-bucket requests run
         # the post-entropy transform as a real [B, ...] batch on paths
         # that support it (serial-loop fallback otherwise). Per-item
         # skip/error outcomes come back in-place, so batch-mates are
         # unaffected and strict refusals still reroute individually.
         t0 = time.perf_counter()
-        try:
-            outcomes = sess.decode_batch([req.data for req in batch.items])
-            if len(outcomes) != len(batch.items):
-                raise RuntimeError(
-                    f"{sess.name}.decode_batch returned {len(outcomes)} "
-                    f"results for {len(batch.items)} items")
-        except Exception as e:
-            # batch-level failures fail the futures, never the worker
-            for req in batch.items:
-                self._fail(req, e)
-            return
+        with trace.span("service.batch_decode", path=sess.name,
+                        batch=len(batch.items),
+                        queued_s=round(time.monotonic() - batch.oldest_t,
+                                       6)):
+            try:
+                outcomes = sess.decode_batch(
+                    [req.data for req in batch.items])
+                if len(outcomes) != len(batch.items):
+                    raise RuntimeError(
+                        f"{sess.name}.decode_batch returned "
+                        f"{len(outcomes)} results for "
+                        f"{len(batch.items)} items")
+            except Exception as e:
+                # batch-level failures fail the futures, never the worker
+                for req in batch.items:
+                    self._fail(req, e)
+                return
         served_s = time.perf_counter() - t0
         refused: List[_Request] = []
         n_ok = 0
@@ -310,7 +325,8 @@ class DecodeService:
         sess = self._session(fb)
         t0 = time.perf_counter()
         try:
-            out = sess.decode(req.data)
+            with trace.span("service.fallback_decode", path=sess.name):
+                out = sess.decode(req.data)
         except Exception as e:
             self._fail(req, e)
             return

@@ -37,6 +37,8 @@ import struct
 import zlib
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.obs import trace
+
 MAGIC = b"RPSHRD01"
 FORMAT_VERSION = 1
 MANIFEST_NAME = "manifest.json"
@@ -239,51 +241,61 @@ class ShardReader:
         if size < HEADER_SIZE:
             raise ShardCorruption(f"{path}: truncated header "
                                   f"({size} < {HEADER_SIZE} bytes)")
-        self._f = open(path, "rb")
-        self._mm = mmap.mmap(self._f.fileno(), 0, access=mmap.ACCESS_READ)
-        self._view = memoryview(self._mm)
-        try:
-            magic, version, n, index_off, _ = _HEADER.unpack_from(self._mm)
-            if magic != MAGIC:
-                raise ShardCorruption(f"{path}: bad magic {magic!r}")
-            if version != FORMAT_VERSION:
-                raise ShardCorruption(
-                    f"{path}: unsupported shard version {version}")
-            index_end = index_off + n * ENTRY_SIZE
-            if index_end + 4 > size:
-                raise ShardCorruption(
-                    f"{path}: truncated shard — index needs "
-                    f"{index_end + 4} bytes, file has {size}")
-            index = bytes(self._view[index_off:index_end])
-            (want_crc,) = struct.unpack_from("<I", self._mm, index_end)
-            if zlib.crc32(index) != want_crc:
-                raise ShardCorruption(f"{path}: index crc32 mismatch")
-            self.entries = [
-                _IndexEntry(*_ENTRY.unpack_from(index, k * ENTRY_SIZE))
-                for k in range(n)]
-            for k, e in enumerate(self.entries):
-                if e.offset < HEADER_SIZE or e.offset + e.length > index_off:
+        # the open span covers mmap + eager index validation — the page
+        # faults and checksum work a traced timeline should attribute to
+        # storage, not to the first decode that touches the shard
+        with trace.span("store.shard_open", file=os.path.basename(path)):
+            self._f = open(path, "rb")
+            self._mm = mmap.mmap(self._f.fileno(), 0,
+                                 access=mmap.ACCESS_READ)
+            self._view = memoryview(self._mm)
+            try:
+                magic, version, n, index_off, _ = \
+                    _HEADER.unpack_from(self._mm)
+                if magic != MAGIC:
+                    raise ShardCorruption(f"{path}: bad magic {magic!r}")
+                if version != FORMAT_VERSION:
                     raise ShardCorruption(
-                        f"{path}: record {k} spans outside the data "
-                        "region")
-        except ShardError:
-            self.close()
-            raise
-        self._verified = [False] * n
+                        f"{path}: unsupported shard version {version}")
+                index_end = index_off + n * ENTRY_SIZE
+                if index_end + 4 > size:
+                    raise ShardCorruption(
+                        f"{path}: truncated shard — index needs "
+                        f"{index_end + 4} bytes, file has {size}")
+                index = bytes(self._view[index_off:index_end])
+                (want_crc,) = struct.unpack_from("<I", self._mm, index_end)
+                if zlib.crc32(index) != want_crc:
+                    raise ShardCorruption(f"{path}: index crc32 mismatch")
+                self.entries = [
+                    _IndexEntry(*_ENTRY.unpack_from(index, k * ENTRY_SIZE))
+                    for k in range(n)]
+                for k, e in enumerate(self.entries):
+                    if e.offset < HEADER_SIZE or \
+                            e.offset + e.length > index_off:
+                        raise ShardCorruption(
+                            f"{path}: record {k} spans outside the data "
+                            "region")
+            except ShardError:
+                self.close()
+                raise
+            self._verified = [False] * n
 
     def __len__(self) -> int:
         return len(self.entries)
 
     def get(self, i: int) -> memoryview:
-        e = self.entries[i]
-        view = self._view[e.offset:e.offset + e.length]
-        if not self._verified[i]:
-            if zlib.crc32(view) != e.crc32:
-                raise ShardCorruption(
-                    f"{self.path}: record {i} crc32 mismatch "
-                    "(corrupt payload)")
-            self._verified[i] = True
-        return view
+        with trace.span("store.record_read"):
+            e = self.entries[i]
+            view = self._view[e.offset:e.offset + e.length]
+            if not self._verified[i]:
+                # first touch only: steady-state reads skip the span too
+                with trace.span("store.crc_verify", record=i):
+                    if zlib.crc32(view) != e.crc32:
+                        raise ShardCorruption(
+                            f"{self.path}: record {i} crc32 mismatch "
+                            "(corrupt payload)")
+                self._verified[i] = True
+            return view
 
     def close(self) -> None:
         view, self._view = getattr(self, "_view", None), None

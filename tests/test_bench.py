@@ -179,6 +179,77 @@ def test_smoke_sweep_artifacts_validate(smoke_sweep):
                                        "report_smoke.md"))
 
 
+def test_measured_cells_record_microsecond_elapsed(smoke_sweep):
+    """elapsed_s keeps 6 decimals: smoke cells finish in milliseconds,
+    and the old 3-decimal rounding collapsed them to indistinguishable
+    (often zero) values."""
+    measured = [r.meta["elapsed_s"] for r in smoke_sweep.records
+                if "elapsed_s" in r.meta]
+    assert measured
+    for e in measured:
+        assert e == round(e, 6)
+    # with millisecond-only precision every value would be k/1000
+    assert any(round(e * 1000, 6) % 1 != 0 for e in measured)
+
+
+def test_traced_sweep_writes_perfetto_artifact_and_stage_s(tmp_path):
+    """The --trace acceptance path: a traced sweep yields (a) records
+    whose meta.stage_s carries a schema-validated per-stage breakdown
+    covering pipeline and loader seams, and (b) one merged Chrome
+    trace-event artifact with events from the loader cell's workers."""
+    res = run_sweep("smoke", only=["single/numpy-fast",
+                                   "loader/numpy-fast/w2/thread"],
+                    out_dir=str(tmp_path), trace=True)
+    by_name = {r.scenario: r for r in res.records}
+    single = by_name["single/numpy-fast"]
+    loader = by_name["loader/numpy-fast/w2/thread"]
+    assert single.ok and loader.ok
+    for r in (single, loader):
+        stage = r.meta["stage_s"]
+        assert stage and all(v >= 0 for v in stage.values())
+        validate_record(r.to_json())           # meta.stage_s is schema'd
+        assert {"jpeg.parse", "jpeg.entropy"} <= set(stage)
+    # loader-layer stages only exist in the loader cell's breakdown
+    assert "loader.decode" in loader.meta["stage_s"]
+    assert "loader.queue_wait" in loader.meta["stage_s"]
+    assert "loader.decode" not in single.meta["stage_s"]
+
+    assert res.trace_path == str(tmp_path / "trace_smoke.json")
+    assert res.trace_path in res.files
+    doc = json.load(open(res.trace_path))
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms" and evs
+    for e in evs:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+    # worker-thread attribution survived into the merged artifact
+    tids = {e["tid"] for e in evs if e["name"] == "loader.decode"}
+    assert len(tids) >= 2
+
+
+def test_untraced_sweep_has_no_stage_s(tmp_path):
+    res = run_sweep("smoke", only=["single/numpy-fast"],
+                    out_dir=str(tmp_path))
+    (rec,) = res.records
+    assert rec.ok and "stage_s" not in rec.meta
+    assert res.trace_path is None
+    assert not os.path.exists(tmp_path / "trace_smoke.json")
+
+
+def test_schema_validates_stage_s():
+    d = _rec().to_json()
+    d["meta"]["stage_s"] = {"jpeg.parse": 0.01, "jpeg.entropy": 0.2}
+    validate_record(d)
+    d["meta"]["stage_s"] = {"jpeg.parse": -0.01}
+    with pytest.raises(SchemaError, match="stage_s"):
+        validate_record(d)
+    d["meta"]["stage_s"] = ["jpeg.parse"]
+    with pytest.raises(SchemaError, match="stage_s"):
+        validate_record(d)
+    d["meta"]["stage_s"] = {"jpeg.parse": "fast"}
+    with pytest.raises(SchemaError, match="stage_s"):
+        validate_record(d)
+
+
 def test_smoke_records_feed_decision(smoke_sweep):
     rec = decision.recommend(smoke_sweep.records)
     assert "live-host" in rec["protocol_disagreement"]

@@ -154,8 +154,9 @@ def test_process_workers_open_shard_by_path(corpus, shard_dir):
     corpus size."""
     dl = mkloader(load_corpus_shards(shard_dir), num_workers=2,
                   mode="process")
-    handle, path_name = dl._proc_initargs()
-    blob = pickle.dumps((handle, path_name))
+    handle, path_name, trace_cfg = dl._proc_initargs()
+    assert trace_cfg is None                  # tracing off: nothing shipped
+    blob = pickle.dumps((handle, path_name, trace_cfg))
     assert len(blob) < 512
     for probe in corpus.files[:3]:
         assert probe[:24] not in blob         # no record payload leaked
