@@ -101,7 +101,10 @@ def build_parser() -> argparse.ArgumentParser:
 
 def cmd_sweep(args) -> int:
     from repro.bench import BenchSelectionError, run_sweep
-    only = [t for t in (args.only or "").split(",") if t] or None
+    from repro.core.selectors import parse_selector
+    # tokenize only: sweep selectors allow family *prefixes*, which the
+    # bench registry validates (BenchSelectionError below)
+    only = parse_selector(args.only)
     kw = {}
     if args.out:
         kw["out_dir"] = args.out
@@ -161,11 +164,11 @@ def cmd_tables(args) -> int:
         "kernels": kernels_bench, "roofline": roofline,
         "service": service_bench,
     }
-    only = [t for t in (args.only or "").split(",") if t]
-    bad = sorted(set(only) - set(benches))
-    if bad:
-        print(f"error: unknown table(s) {', '.join(bad)}; valid names: "
-              f"{', '.join(benches)}", file=sys.stderr)
+    from repro.core.selectors import SelectorError, parse_selector
+    try:
+        only = parse_selector(args.only, valid=benches, what="table")
+    except SelectorError as e:
+        print(f"error: {e}", file=sys.stderr)
         return 2
     quick = not args.full
     print("name,us_per_call,derived")

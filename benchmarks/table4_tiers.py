@@ -26,7 +26,7 @@ def run(quick: bool = True):
             derived.setdefault(d, {})[plat] = v / local_max
     cross_ok = []
     for dec in PD.TABLE4:
-        for plat, v in derived.get(dec, {}).items():
+        for v in derived.get(dec, {}).values():
             row = PD.TABLE4[dec]
             cross_ok.append(row["min"] - 1e-9 <= v <= row["max"] + 1e-9)
     rows.append(("table4.recorded", 0.0,

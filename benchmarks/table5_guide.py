@@ -25,7 +25,8 @@ def run(quick: bool = True):
     peaks = decision.peak_loader_throughput(recs)
     match = 0
     for plat, entries in PD.TABLE5.items():
-        ours = max(peaks[plat], key=lambda d: peaks[plat][d].throughput_mean)
+        ours = max(peaks[plat].items(),
+                   key=lambda kv: kv[1].throughput_mean)[0]
         match += ours == entries[0][0]
     rows.append(("table5.recorded", 0.0,
                  f"first_choice_match={match}/5"))

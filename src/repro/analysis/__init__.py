@@ -1,0 +1,14 @@
+"""repro.analysis — AST invariant checker over the repo's own source.
+
+The tier-1 tests prove the invariants hold at the callsites they cover;
+this package makes the same invariants hold *everywhere*, at the AST:
+fork/pickle safety for pool initargs, lock discipline for shared
+attributes, jit/Pallas tracing hygiene, exception discipline, and the
+schema/trace constructor conventions. ``python -m repro.analysis check``
+is a hard CI gate (see DESIGN.md §9 for the catalog and the suppression
+/ baseline workflow).
+"""
+from repro.analysis.engine import (Finding, analyze_paths, analyze_source,
+                                   summarize)
+
+__all__ = ["Finding", "analyze_paths", "analyze_source", "summarize"]

@@ -1,0 +1,222 @@
+"""JIT hygiene: what must not appear inside traced function bodies.
+
+Three failure shapes, all observed in jax codebases of this kind:
+
+* Python ``if``/``while``/``assert`` on a *traced* argument — raises
+  ``TracerBoolConversionError`` at best, silently bakes one branch into
+  the compiled function at worst. Shape/dtype probes (``x.shape``,
+  ``len(x)``) are static under tracing and stay allowed, as do
+  parameters declared in ``static_argnames``/``static_argnums``.
+* ``np.*`` calls inside a jitted or Pallas body — host round-trips that
+  either fail on tracers or quietly constant-fold at trace time; the
+  repo convention is jnp/``jax.lax`` inside, numpy outside.
+* ``jax.jit`` called inside a loop — every iteration builds a fresh
+  jitted callable, so nothing ever hits the compile cache.
+
+Function discovery is deliberately syntactic: ``@jax.jit``/``@jit``
+decorators, ``@partial(jax.jit, ...)`` (bare or ``functools.``-
+qualified), and Pallas kernels — any function passed (directly or via a
+``partial(kernel, ...)`` alias) as the first argument to
+``*.pallas_call``. For kernels the traced parameters are the ``*_ref``
+ones (the repo-wide Ref naming convention); ``partial``-bound scalars
+like ``causal``/``blk_q`` are compile-time constants and exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.rules.base import (Rule, const_strs, dotted,
+                                       keyword_value, terminal)
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_PROBES = {"len", "isinstance", "type"}
+_BRANCH_KIND = {ast.If: "if", ast.While: "while", ast.IfExp: "if-else",
+                ast.Assert: "assert"}
+
+_FnDef = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in getattr(a, "posonlyargs", []) + a.args
+             + a.kwonlyargs]
+    for extra in (a.vararg, a.kwarg):
+        if extra is not None:
+            names.append(extra.arg)
+    return names
+
+
+def _jit_statics(dec: ast.AST, fn: ast.AST) -> Optional[Set[str]]:
+    """Static parameter names if ``dec`` is a jit decorator, else None."""
+    if dotted(dec) in ("jax.jit", "jit"):
+        return set()
+    if not isinstance(dec, ast.Call):
+        return None
+    fname = dotted(dec.func)
+    if fname in ("jax.jit", "jit"):
+        call = dec
+    elif terminal(fname) == "partial" and dec.args \
+            and dotted(dec.args[0]) in ("jax.jit", "jit"):
+        call = dec
+    else:
+        return None
+    statics = const_strs(keyword_value(call, "static_argnames"))
+    nums = keyword_value(call, "static_argnums")
+    if nums is not None:
+        params = _param_names(fn)
+        elts = nums.elts if isinstance(nums, (ast.Tuple, ast.List)) \
+            else [nums]
+        for el in elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int) \
+                    and 0 <= el.value < len(params):
+                statics.add(params[el.value])
+    return statics
+
+
+def collect_traced_functions(tree: ast.AST
+                             ) -> Dict[ast.AST, Tuple[str, Set[str]]]:
+    """Map function node -> (kind, traced parameter names).
+
+    kind is ``"jit"`` or ``"pallas"``; traced names are the parameters a
+    rule must assume hold tracers/Refs inside the body.
+    """
+    fns_by_name: Dict[str, ast.AST] = {}
+    jitted: Dict[ast.AST, Set[str]] = {}
+    partial_alias: Dict[str, str] = {}   # var -> wrapped function name
+    kernel_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, _FnDef):
+            fns_by_name.setdefault(node.name, node)
+            for dec in node.decorator_list:
+                statics = _jit_statics(dec, node)
+                if statics is not None:
+                    jitted[node] = statics
+                    break
+        elif isinstance(node, ast.Assign) \
+                and isinstance(node.value, ast.Call) \
+                and terminal(dotted(node.value.func)) == "partial" \
+                and node.value.args:
+            inner = terminal(dotted(node.value.args[0]))
+            if inner:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        partial_alias[t.id] = inner
+        elif isinstance(node, ast.Call) \
+                and terminal(dotted(node.func)) == "pallas_call" \
+                and node.args:
+            first = terminal(dotted(node.args[0]))
+            if first:
+                kernel_names.add(partial_alias.get(first, first))
+    out: Dict[ast.AST, Tuple[str, Set[str]]] = {}
+    for fn, statics in jitted.items():
+        out[fn] = ("jit", set(_param_names(fn)) - statics)
+    for name in kernel_names:
+        fn = fns_by_name.get(name)
+        if fn is not None and fn not in out:
+            out[fn] = ("pallas",
+                       {p for p in _param_names(fn)
+                        if p.endswith("_ref")})
+    return out
+
+
+class _TracedBodyRule(Rule):
+    """Base for rules that inspect jitted/Pallas function bodies."""
+
+    def setup(self, module) -> None:
+        self.traced_fns = collect_traced_functions(module.tree)
+
+    def _each_traced(self):
+        for fn, (kind, traced) in self.traced_fns.items():
+            yield fn, kind, traced
+
+    def visit_Module(self, node: ast.Module) -> None:
+        for fn, kind, traced in self._each_traced():
+            self.check_function(fn, kind, traced)
+        # no generic_visit: traversal is driven from the function list
+
+
+class JitTracedBranch(_TracedBodyRule):
+    id = "jit-traced-branch"
+    summary = ("no Python branching (if/while/assert) on traced "
+               "arguments inside jitted or Pallas bodies")
+    motivation = ("branching on a tracer raises "
+                  "TracerBoolConversionError — or, via __bool__ on a "
+                  "concrete trace-time value, silently bakes one branch "
+                  "for all inputs; the fused transform jits per bucket "
+                  "precisely so shape branches stay static")
+
+    def check_function(self, fn, kind: str, traced: Set[str]) -> None:
+        if not traced:
+            return
+        for node in ast.walk(fn):
+            branch = _BRANCH_KIND.get(type(node))
+            if branch is None:
+                continue
+            for name in ast.walk(node.test):
+                if isinstance(name, ast.Name) and name.id in traced \
+                        and isinstance(name.ctx, ast.Load) \
+                        and not self._static_probe(name):
+                    self.report(
+                        name,
+                        f"`{branch}` tests traced argument "
+                        f"'{name.id}' of {fn.name}() — use jax.lax."
+                        f"cond/select or declare it static")
+
+    def _static_probe(self, name: ast.Name) -> bool:
+        parent = self.module.parent(name)
+        if isinstance(parent, ast.Attribute) \
+                and parent.attr in _SHAPE_ATTRS:
+            return True
+        if isinstance(parent, ast.Call) \
+                and terminal(dotted(parent.func)) in _STATIC_PROBES:
+            return True
+        return False
+
+
+class JitHostNumpy(_TracedBodyRule):
+    id = "jit-host-numpy"
+    summary = "no np.* calls inside jitted or Pallas bodies"
+    motivation = ("np.asarray/np.round on a tracer fails or silently "
+                  "constant-folds at trace time; precompute on the host "
+                  "(as the fused transform does with its IDCT matrix) "
+                  "and pass the array in")
+
+    def check_function(self, fn, kind: str, traced: Set[str]) -> None:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted(node.func)
+            if fname and (fname.startswith("np.")
+                          or fname.startswith("numpy.")):
+                self.report(node,
+                            f"{fname}() called inside {kind} body "
+                            f"{fn.name}() — host numpy does not trace; "
+                            f"use jnp or hoist the computation out")
+
+
+class JitInLoop(Rule):
+    id = "jit-in-loop"
+    summary = "jax.jit must not be called inside a loop"
+    motivation = ("each jax.jit call returns a distinct callable with "
+                  "its own cache entry, so jitting per iteration "
+                  "recompiles every time — the batched decode path "
+                  "exists to amortize exactly this cost")
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = dotted(node.func)
+        is_jit = name in ("jax.jit", "jit") or (
+            terminal(name) == "partial" and node.args
+            and dotted(node.args[0]) in ("jax.jit", "jit"))
+        if is_jit:
+            for anc in self.module.ancestors(node):
+                if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)):
+                    break               # loop must be inside same function
+                if isinstance(anc, (ast.For, ast.AsyncFor, ast.While)):
+                    self.report(node,
+                                "jax.jit called inside a loop — every "
+                                "iteration builds a fresh callable and "
+                                "recompiles; jit once outside and reuse")
+                    break
+        self.generic_visit(node)

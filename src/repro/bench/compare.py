@@ -140,7 +140,7 @@ def compare_paths(old_path: str, new_path: str, *,
     old = load_payload(old_path)
     new = load_payload(new_path)
     return compare_records(
-        [RunRecord(**r) for r in old["records"]],
-        [RunRecord(**r) for r in new["records"]],
+        [RunRecord.from_json(r) for r in old["records"]],
+        [RunRecord.from_json(r) for r in new["records"]],
         fail_ratio=fail_ratio, z=z,
         old_host=old.get("host"), new_host=new.get("host"))

@@ -167,7 +167,8 @@ def host_metadata() -> dict:
     try:
         from repro.common.hw import host_fingerprint
         meta["fingerprint"] = host_fingerprint()
-    except Exception:                     # fingerprint is best-effort extra
+    # repro: ignore[except-swallow] -- fingerprint is best-effort extra
+    except Exception:
         pass
     return meta
 

@@ -86,7 +86,8 @@ class SkipLedger:
             return list(self.skips)
 
     def restore(self, state) -> None:
-        self.skips = [tuple(s) for s in state]
+        with self._lock:
+            self.skips = [tuple(s) for s in state]
 
 
 def center_fit(img: np.ndarray, th: int, tw: int) -> np.ndarray:

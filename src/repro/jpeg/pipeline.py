@@ -343,7 +343,7 @@ def transform_jnp(spec: DecodeSpec, coef: Dict[int, np.ndarray],
     # unjitted: eager stage-by-stage dispatch (the "wrapper overhead" path)
     planes = []
     with trace.span("jpeg.dequant_idct"):
-        for i, c in enumerate(spec.components):
+        for i in range(len(spec.components)):
             deq = dequant_jnp(coefs[i], qts[i])
             blocks = (idct_blocks_jnp_separable(deq) if separable
                       else idct_blocks_jnp(deq))

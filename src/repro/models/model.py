@@ -72,7 +72,8 @@ def init(key, cfg: ModelConfig) -> Params:
             else:
                 rkeys = jax.random.split(jkey, stage.repeat)
                 stacked[f"layer{j}"] = jax.vmap(
-                    lambda k: _init_layer(k, spec, cfg))(rkeys)
+                    lambda k, _spec=spec: _init_layer(k, _spec, cfg)
+                )(rkeys)
         params[f"stage{si}"] = stacked
         if shared:
             params[f"stage{si}_shared"] = shared

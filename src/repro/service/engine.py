@@ -127,15 +127,16 @@ class DecodeService:
         return self
 
     def stop(self, graceful: bool = True) -> None:
-        if not self._started or self._closed:
-            self._closed = True
-            return
-        if not graceful:
-            self._abort = True
         with self._submit_lock:
+            was_active = self._started and not self._closed
             self._closed = True
-            if self.cfg.num_workers > 0:
-                self._inbound.put(_STOP)
+            if was_active:
+                if not graceful:
+                    self._abort = True
+                if self.cfg.num_workers > 0:
+                    self._inbound.put(_STOP)
+        if not was_active:
+            return
         if self.cfg.num_workers > 0:
             self._threads[0].join()               # batcher drains + flushes
             for _ in range(self.cfg.num_workers):

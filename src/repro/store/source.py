@@ -186,10 +186,11 @@ class ShardSource:
         return self.manifest.get("meta", {})
 
     def close(self) -> None:
-        for k, r in enumerate(self._readers):
-            if r is not None:
-                r.close()
-                self._readers[k] = None
+        with self._open_lock:
+            for k, r in enumerate(self._readers):
+                if r is not None:
+                    r.close()
+                    self._readers[k] = None
 
     def __enter__(self) -> "ShardSource":
         return self

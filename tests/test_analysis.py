@@ -1,0 +1,441 @@
+"""Invariant checker: per-rule fixture positives and near-miss
+negatives, suppression and baseline round-trips, CLI exit codes, the
+shared selector vocabulary, and the self-check that the live tree is
+clean (the same gate CI enforces)."""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source
+from repro.analysis.baseline import (load_baseline, partition,
+                                     write_baseline)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.engine import parse_suppressions
+from repro.analysis.rules import RULES, resolve_rules
+from repro.core.selectors import SelectorError, parse_selector, \
+    split_tokens
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(source, only):
+    return analyze_source(textwrap.dedent(source), only=[only])
+
+
+def rule_ids(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------- fork safety
+def test_fork_initargs_flags_materializer():
+    found = run("""
+        import multiprocessing as mp
+        class L:
+            def go(self):
+                mp.Pool(2, initializer=init,
+                        initargs=(list(self.files), 3))
+        """, "fork-initargs-bytes")
+    assert rule_ids(found) == ["fork-initargs-bytes"]
+    assert "list(...)" in found[0].message
+
+
+def test_fork_initargs_flags_banned_name():
+    found = run("""
+        import multiprocessing as mp
+        mp.Pool(2, initializer=init, initargs=(corpus, 7))
+        """, "fork-initargs-bytes")
+    assert rule_ids(found) == ["fork-initargs-bytes"]
+
+
+def test_fork_initargs_resolves_self_method():
+    # the loader's exact indirection: initargs=self._proc_initargs()
+    found = run("""
+        import multiprocessing as mp
+        class L:
+            def _proc_initargs(self):
+                return (list(self.files), self.name)
+            def go(self, ctx):
+                ctx.Pool(2, initializer=init,
+                         initargs=self._proc_initargs())
+        """, "fork-initargs-bytes")
+    assert rule_ids(found) == ["fork-initargs-bytes"]
+
+
+def test_fork_initargs_allows_handles():
+    # near-miss: a handle-producing call and a plain path are fine
+    found = run("""
+        import multiprocessing as mp
+        class L:
+            def go(self, ctx):
+                ctx.Pool(2, initializer=init,
+                         initargs=(self.source.open_in_worker(),
+                                   self.path_name))
+        """, "fork-initargs-bytes")
+    assert found == []
+
+
+def test_fork_initializer_lambda_and_bound_method():
+    found = run("""
+        import multiprocessing as mp
+        class L:
+            def go(self):
+                mp.Pool(2, initializer=lambda: setup(self.files))
+                mp.Pool(2, initializer=self._init)
+        """, "fork-initializer-closure")
+    assert rule_ids(found) == ["fork-initializer-closure"] * 2
+
+
+def test_fork_initializer_module_function_ok():
+    found = run("""
+        import multiprocessing as mp
+        mp.Pool(2, initializer=_proc_init, initargs=(1,))
+        """, "fork-initializer-closure")
+    assert found == []
+
+
+# ---------------------------------------------------- lock discipline
+LOCKED_CLASS = """
+    class Ledger:
+        def __init__(self):
+            self.skips = []          # unlocked in __init__: exempt
+        def record(self, item):
+            with self._lock:
+                self.skips.append(item)
+        def restore(self, state):
+            self.skips = list(state)
+    """
+
+
+def test_lock_flags_bare_write_of_guarded_attr():
+    found = run(LOCKED_CLASS, "lock-unguarded-write")
+    assert rule_ids(found) == ["lock-unguarded-write"]
+    assert "restore()" in found[0].message
+    assert "self._lock" in found[0].message
+
+
+def test_lock_flags_bare_mutator_call():
+    found = run("""
+        class Q:
+            def put(self, x):
+                with self._q_lock:
+                    self.items.append(x)
+            def drop_all(self):
+                self.items.clear()
+        """, "lock-unguarded-write")
+    assert rule_ids(found) == ["lock-unguarded-write"]
+
+
+def test_lock_allows_reads_and_locked_suffix_methods():
+    found = run("""
+        class B:
+            def push(self, x):
+                with self._lock:
+                    self.buf.append(x)
+            def peek(self):
+                return len(self.buf)       # read: allowed fast path
+            def _pop_locked(self):
+                self.buf = []              # caller holds the lock
+        """, "lock-unguarded-write")
+    assert found == []
+
+
+def test_lock_ignores_never_guarded_attrs():
+    found = run("""
+        class C:
+            def a(self):
+                self.n = 1
+            def b(self):
+                self.n = 2
+        """, "lock-unguarded-write")
+    assert found == []
+
+
+# ------------------------------------------------------- jit hygiene
+def test_jit_flags_branch_on_traced_arg():
+    found = run("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """, "jit-traced-branch")
+    assert rule_ids(found) == ["jit-traced-branch"]
+    assert "'x'" in found[0].message
+
+
+def test_jit_allows_static_argnames_and_shape_probes():
+    found = run("""
+        import jax
+        from functools import partial
+        @partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            if n > 2 and x.shape[0] > 8 and len(x) > 1:
+                return x
+            return x * n
+        """, "jit-traced-branch")
+    assert found == []
+
+
+def test_jit_pallas_kernel_via_partial_alias():
+    # the flash-attention shape: kernel bound with functools.partial,
+    # static scalars branch freely, Refs must not
+    found = run("""
+        import functools
+        from jax.experimental import pallas as pl
+        def _kernel(x_ref, o_ref, *, causal):
+            if causal:
+                pass
+            while x_ref:
+                pass
+        def launch(x, causal):
+            kernel = functools.partial(_kernel, causal=causal)
+            return pl.pallas_call(kernel, grid=(1,))(x)
+        """, "jit-traced-branch")
+    assert rule_ids(found) == ["jit-traced-branch"]
+    assert "'x_ref'" in found[0].message
+
+
+def test_jit_flags_host_numpy_in_body():
+    found = run("""
+        import jax, numpy as np
+        @jax.jit
+        def f(x):
+            return np.round(x)
+        """, "jit-host-numpy")
+    assert rule_ids(found) == ["jit-host-numpy"]
+
+
+def test_jit_host_numpy_ok_outside_jit():
+    found = run("""
+        import numpy as np
+        def f(x):
+            return np.round(x)
+        """, "jit-host-numpy")
+    assert found == []
+
+
+def test_jit_in_loop_flagged_and_hoisted_ok():
+    found = run("""
+        import jax
+        fs = []
+        for g in gs:
+            fs.append(jax.jit(g))
+        hoisted = jax.jit(h)
+        """, "jit-in-loop")
+    assert rule_ids(found) == ["jit-in-loop"]
+
+
+def test_jit_in_loop_ignores_function_defined_in_loop_scope():
+    # the jit call is inside a nested function; the loop around the
+    # *definition* does not re-invoke jit per iteration
+    found = run("""
+        import jax
+        for g in gs:
+            def make(fn=g):
+                return jax.jit(fn)
+        """, "jit-in-loop")
+    assert found == []
+
+
+# ------------------------------------------------ exception discipline
+def test_except_swallow_flagged():
+    found = run("""
+        try:
+            work()
+        except Exception:
+            pass
+        """, "except-swallow")
+    assert rule_ids(found) == ["except-swallow"]
+
+
+def test_except_ok_when_used_raised_or_narrow():
+    found = run("""
+        try:
+            work()
+        except Exception as e:
+            log(e)
+        try:
+            work()
+        except BaseException:
+            raise
+        try:
+            work()
+        except ValueError:
+            pass
+        """, "except-swallow")
+    assert found == []
+
+
+# ------------------------------------------------ schema / trace rules
+def test_schema_raw_record_flagged_outside_schema_module():
+    found = analyze_source("x = RunRecord(**d)\n",
+                           path="src/repro/bench/foo.py",
+                           only=["schema-raw-record"])
+    assert rule_ids(found) == ["schema-raw-record"]
+
+
+def test_schema_raw_record_allowed_in_schema_and_keywords():
+    inside = analyze_source("x = RunRecord(**d)\n",
+                            path="src/repro/core/schema.py",
+                            only=["schema-raw-record"])
+    keywords = analyze_source("x = RunRecord(platform='p', decoder='d')\n",
+                              path="src/repro/bench/foo.py",
+                              only=["schema-raw-record"])
+    assert inside == [] and keywords == []
+
+
+def test_trace_span_must_be_entered():
+    found = run("""
+        def f(t):
+            t.span("loose")
+            with t.span("timed"):
+                pass
+            return t.span("forwarded")
+        """, "trace-span-no-with")
+    assert rule_ids(found) == ["trace-span-no-with"]
+    assert found[0].line == 3
+
+
+# ------------------------------------------------------- suppressions
+def test_inline_suppression_silences_matching_rule_only():
+    src = ("try:\n    work()\n"
+           "except Exception:  # repro: ignore[except-swallow] -- probe\n"
+           "    pass\n")
+    assert analyze_source(src, only=["except-swallow"]) == []
+    # a different rule id on the same line does NOT suppress
+    src_wrong = src.replace("except-swallow", "jit-in-loop")
+    assert rule_ids(analyze_source(src_wrong, only=["except-swallow"])) \
+        == ["except-swallow"]
+
+
+def test_standalone_suppression_covers_next_line():
+    src = ("try:\n    work()\n"
+           "# repro: ignore[except-swallow] -- failure is the datum\n"
+           "except Exception:\n    pass\n")
+    assert analyze_source(src, only=["except-swallow"]) == []
+
+
+def test_parse_suppressions_multi_rule():
+    sup = parse_suppressions(
+        ["x = 1  # repro: ignore[a, b] -- both", "# repro: ignore[c]"])
+    assert sup[1] == {"a", "b"}
+    assert sup[3] == {"c"}              # standalone covers line below
+
+
+# ------------------------------------------------------------ baseline
+def test_baseline_round_trip_and_partition(tmp_path):
+    src = "try:\n    work()\nexcept Exception:\n    pass\n"
+    findings = analyze_source(src, path="pkg/mod.py")
+    path = str(tmp_path / "base.json")
+    write_baseline(path, findings)
+    known = load_baseline(path)
+    assert partition(findings, known) == []
+    # identity survives pure line moves (key has no line number)
+    moved = analyze_source("\n\n" + src, path="pkg/mod.py")
+    assert partition(moved, known) == []
+    # a different module is a NEW finding
+    other = analyze_source(src, path="pkg/other.py")
+    assert partition(other, known) == other
+
+
+def test_baseline_missing_file_is_empty_and_bad_file_errors(tmp_path):
+    assert load_baseline(str(tmp_path / "absent.json")) == set()
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"version": 99}))
+    with pytest.raises(ValueError):
+        load_baseline(str(bad))
+
+
+# ----------------------------------------------------------------- CLI
+def _tree(tmp_path, source):
+    pkg = tmp_path / "src"
+    pkg.mkdir(parents=True)
+    (pkg / "mod.py").write_text(textwrap.dedent(source))
+    return str(tmp_path)
+
+
+def test_cli_check_clean_and_dirty(tmp_path, capsys):
+    root = _tree(tmp_path, """
+        try:
+            work()
+        except Exception:
+            pass
+        """)
+    assert cli_main(["check", "--root", root, "--no-baseline"]) == 1
+    out = capsys.readouterr().out
+    assert "except-swallow" in out and "src/mod.py" in out
+    clean = _tree(tmp_path / "c", "x = 1\n")
+    assert cli_main(["check", "--root", clean, "--no-baseline"]) == 0
+
+
+def test_cli_baseline_then_check_passes(tmp_path, capsys):
+    root = _tree(tmp_path, """
+        try:
+            work()
+        except Exception:
+            pass
+        """)
+    base = str(tmp_path / "b.json")
+    assert cli_main(["baseline", "--root", root, "--baseline", base]) == 0
+    assert cli_main(["check", "--root", root, "--baseline", base]) == 0
+    assert "1 baselined" in capsys.readouterr().out
+
+
+def test_cli_unknown_rule_is_usage_error(tmp_path, capsys):
+    root = _tree(tmp_path, "x = 1\n")
+    code = cli_main(["check", "--root", root, "--only", "no-such-rule"])
+    assert code == 2
+    err = capsys.readouterr().err
+    assert "no-such-rule" in err and "except-swallow" in err
+
+
+def test_cli_json_format(tmp_path, capsys):
+    root = _tree(tmp_path, "try:\n    w()\nexcept Exception:\n    pass\n")
+    assert cli_main(["check", "--root", root, "--no-baseline",
+                     "--format", "json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["findings"][0]["rule"] == "except-swallow"
+
+
+def test_cli_syntax_error_fails_the_gate(tmp_path, capsys):
+    root = _tree(tmp_path, "def broken(:\n")
+    assert cli_main(["check", "--root", root, "--no-baseline"]) == 1
+    assert "parse-error" in capsys.readouterr().out
+
+
+# ------------------------------------------------- registry/selectors
+def test_resolve_rules_subset_order_and_unknown():
+    assert [c.id for c in resolve_rules(None)] == list(RULES)
+    subset = resolve_rules(["except-swallow,jit-in-loop"])
+    assert {c.id for c in subset} == {"except-swallow", "jit-in-loop"}
+    with pytest.raises(SelectorError):
+        resolve_rules(["nope"])
+
+
+def test_every_rule_documents_itself():
+    for rule_id, cls in RULES.items():
+        assert rule_id and rule_id == cls.id
+        assert cls.summary and cls.motivation
+
+
+def test_split_tokens_and_parse_selector():
+    assert split_tokens(None) == []
+    assert split_tokens(" a, b ,,c ") == ["a", "b", "c"]
+    assert split_tokens(["a,b", "c"]) == ["a", "b", "c"]
+    assert parse_selector("") is None
+    assert parse_selector("a,b", valid=["a", "b", "c"]) == ["a", "b"]
+    with pytest.raises(SelectorError) as ei:
+        parse_selector("a,zz", valid=["a", "b"], what="table")
+    assert "zz" in str(ei.value) and "table" in str(ei.value)
+
+
+# ----------------------------------------------------------- self-check
+def test_live_tree_is_clean():
+    # the exact invariant CI gates on: default roots, no baseline help
+    findings = analyze_paths(root=REPO)
+    known = load_baseline(os.path.join(REPO, "analysis-baseline.json"))
+    assert partition(findings, known) == [], \
+        "\n".join(f.render() for f in findings)

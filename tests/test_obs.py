@@ -113,7 +113,7 @@ def test_span_nesting_and_thread_attribution_roundtrip(tmp_path):
         assert e["dur"] >= 0 and e["ts"] >= 0
         by_tag.setdefault(e["args"]["tag"], {})[e["name"]] = e
     assert set(by_tag) == {"main", "worker"}
-    for tag, spans in by_tag.items():
+    for spans in by_tag.values():
         outer, inner = spans["outer"], spans["inner"]
         # same thread, and the inner span is contained in the outer
         assert outer["tid"] == inner["tid"]

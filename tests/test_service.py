@@ -120,7 +120,7 @@ def test_bucket_key_groups_by_padded_mcu_grid(corpus):
         keys.setdefault(bucket_key(f, granularity=4), []).append(
             (spec.height, spec.width, len(spec.components)))
     assert 1 < len(keys) < len(corpus.files)   # grouping, not degenerate
-    for key, members in keys.items():
+    for members in keys.values():
         assert len({ncomp for _, _, ncomp in members}) == 1
 
 
@@ -231,7 +231,7 @@ def test_bandit_converges_to_fastest_path(corpus):
     slow = timed_path("slow-arm", 0.01)
     with mksvc(paths=[slow, fast], cache_bytes=0, num_workers=1,
                max_batch=2, max_wait_ms=1.0) as svc:
-        for round_ in range(30):
+        for _ in range(30):
             futs = [svc.submit(f) for f in corpus.files[:4]]
             for f in futs:
                 f.result(timeout=60)

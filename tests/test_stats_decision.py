@@ -99,7 +99,7 @@ def test_paper_table4_consistency_with_table5():
 
 
 def test_paper_table4_means_within_bounds():
-    for dec, row in PD.TABLE4.items():
+    for row in PD.TABLE4.values():
         assert row["min"] <= row["mean"] <= row["max"]
         assert row["min"] >= PD.PRACTICAL_FLOOR
 
@@ -145,5 +145,6 @@ def test_recommend_on_recorded_matrix_matches_paper_tier():
             recs.append(_rec(plat, dec, "dataloader", float(thr), w))
     peaks = decision.peak_loader_throughput(recs)
     for plat, rows in PD.TABLE5.items():
-        ours = max(peaks[plat], key=lambda d: peaks[plat][d].throughput_mean)
+        ours = max(peaks[plat].items(),
+                   key=lambda kv: kv[1].throughput_mean)[0]
         assert ours == rows[0][0], plat

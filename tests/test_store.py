@@ -169,11 +169,11 @@ def test_process_workers_open_shard_by_path(corpus, shard_dir):
 def test_process_pool_reused_across_epochs(corpus, shard_dir):
     dl = mkloader(load_corpus_shards(shard_dir), num_workers=2,
                   mode="process")
-    for b in dl:
+    for _ in dl:
         pass
     pool_first = dl._pool
     assert pool_first is not None             # hoisted, not per-epoch
-    for b in dl:
+    for _ in dl:
         pass
     assert dl._pool is pool_first             # same pool on epoch 2
     dl.close()
