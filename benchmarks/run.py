@@ -94,6 +94,10 @@ def build_parser() -> argparse.ArgumentParser:
     cp.add_argument("--warn-only", action="store_true",
                     help="report failures but exit 0 (bootstrap mode "
                          "while baselines stabilize)")
+    cp.add_argument("--summary-md", default=None, metavar="PATH",
+                    help="also write a ranked regressions/improvements "
+                         "markdown table (CI appends it to "
+                         "$GITHUB_STEP_SUMMARY)")
 
     sub.add_parser("list", help="print the scenario registry")
     return ap
@@ -139,7 +143,8 @@ def cmd_ingest(args) -> int:
     from repro.jpeg.corpus import build_corpus, write_corpus_shards
     from repro.store import load_manifest
     prof = PROFILES[_profile_from_flags(args)]
-    corpus = build_corpus(prof.corpus_n, seed=prof.corpus_seed)
+    corpus = build_corpus(prof.corpus_n, seed=prof.corpus_seed,
+                          restart_intervals=list(prof.corpus_dri) or None)
     manifest = write_corpus_shards(corpus, args.out,
                                    shard_size=args.shard_size)
     man = load_manifest(args.out)
@@ -188,6 +193,7 @@ def cmd_tables(args) -> int:
 
 def cmd_compare(args) -> int:
     from repro.bench import compare_paths
+    from repro.bench.compare import summary_markdown
     from repro.core.report import compare_report
     from repro.core.schema import SchemaError
     try:
@@ -196,6 +202,9 @@ def cmd_compare(args) -> int:
     except (OSError, SchemaError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
+    if args.summary_md:
+        with open(args.summary_md, "w") as f:
+            f.write(summary_markdown(res))
     gated_verdicts = ("fail", "warn", "improved", "ok")
     gated = [e for e in res.entries if e.verdict in gated_verdicts]
     print(compare_report(gated))

@@ -6,7 +6,8 @@ JSON plus derived decision reports, and a noise-aware record-set compare
 gate for CI. `benchmarks/*.py` are thin views over this package.
 """
 from repro.bench.compare import (CompareEntry, CompareResult,
-                                 compare_paths, compare_records)
+                                 compare_paths, compare_records,
+                                 summary_markdown)
 from repro.bench.harness import (DEFAULT_OUT, SweepResult, render_report,
                                  run_sweep)
 from repro.bench.registry import (PROFILES, BenchSelectionError, Profile,
@@ -15,6 +16,7 @@ from repro.bench.registry import (PROFILES, BenchSelectionError, Profile,
 
 __all__ = [
     "CompareEntry", "CompareResult", "compare_paths", "compare_records",
+    "summary_markdown",
     "DEFAULT_OUT", "SweepResult", "render_report", "run_sweep",
     "PROFILES", "BenchSelectionError", "Profile", "Scenario",
     "build_registry", "scenario_names", "select_scenarios",

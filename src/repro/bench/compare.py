@@ -134,6 +134,50 @@ def compare_records(old: Sequence[RunRecord], new: Sequence[RunRecord], *,
                          old_host=old_host or {}, new_host=new_host or {})
 
 
+def summary_markdown(res: CompareResult, *, max_rows: int = 20) -> str:
+    """Render a compare result as the GitHub-flavored markdown summary
+    the CI jobs append to ``$GITHUB_STEP_SUMMARY`` — regressions ranked
+    worst-first, then improvements best-first, so the checks page answers
+    "what moved?" without opening the uploaded JSON."""
+    lines = ["## Bench compare", "", res.summary_line(), ""]
+
+    def table(title: str, entries: List[CompareEntry]) -> None:
+        if not entries:
+            return
+        shown = entries[:max_rows]
+        lines.append(f"### {title} ({len(entries)})")
+        lines.append("")
+        lines.append("| scenario | baseline img/s | candidate img/s "
+                     "| ratio | gate |")
+        lines.append("|---|---:|---:|---:|---:|")
+        for e in shown:
+            lines.append(
+                f"| `{e.scenario}` | {e.old_mean:.1f} | {e.new_mean:.1f} "
+                f"| {e.ratio:.3f}x | ±{e.threshold:.1%} |")
+        if len(entries) > max_rows:
+            lines.append(f"| … {len(entries) - max_rows} more | | | | |")
+        lines.append("")
+
+    table("Failures", sorted(res.by_verdict("fail"),
+                             key=lambda e: e.ratio))
+    table("Regressions", sorted(res.by_verdict("warn"),
+                                key=lambda e: e.ratio))
+    table("Improvements", sorted(res.by_verdict("improved"),
+                                 key=lambda e: -e.ratio))
+    moved = res.n_fail + res.n_warn + len(res.by_verdict("improved"))
+    if not moved:
+        lines.append("No scenarios moved beyond their noise gates.")
+        lines.append("")
+    unmatched = [e for e in res.entries
+                 if e.verdict in ("missing-old", "missing-new", "skipped")]
+    if unmatched:
+        lines.append(f"<sub>{len(unmatched)} scenario(s) not gated "
+                     "(skipped / one-sided); see the records artifact."
+                     "</sub>")
+        lines.append("")
+    return "\n".join(lines)
+
+
 def compare_paths(old_path: str, new_path: str, *,
                   fail_ratio: float = FAIL_RATIO,
                   z: float = NOISE_Z) -> CompareResult:

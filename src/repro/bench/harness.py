@@ -26,10 +26,10 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.bench import service_load
-from repro.bench.registry import (KIND_BATCHED, KIND_LOADER,
-                                  KIND_SERVICE_CLOSED, KIND_SERVICE_OPEN,
-                                  KIND_SINGLE, PROFILES, Profile, Scenario,
-                                  select_scenarios)
+from repro.bench.registry import (ENTROPY_PARALLEL_WORKERS, KIND_BATCHED,
+                                  KIND_LOADER, KIND_SERVICE_CLOSED,
+                                  KIND_SERVICE_OPEN, KIND_SINGLE, PROFILES,
+                                  Profile, Scenario, select_scenarios)
 from repro.common.hw import host_fingerprint
 from repro.core import decision, report
 from repro.core.protocols import LoaderProtocol, SingleThreadProtocol
@@ -96,8 +96,9 @@ class _SweepContext:
     @property
     def corpus(self):
         if self._corpus is None:
-            self._corpus = build_corpus(self.profile.corpus_n,
-                                        seed=self.profile.corpus_seed)
+            self._corpus = build_corpus(
+                self.profile.corpus_n, seed=self.profile.corpus_seed,
+                restart_intervals=list(self.profile.corpus_dri) or None)
         return self._corpus
 
     @property
@@ -172,7 +173,10 @@ class _SweepContext:
 
 def _run_scenario(s: Scenario, ctx: _SweepContext) -> RunRecord:
     if s.kind == KIND_SINGLE:
-        return ctx.single.run_path(s.path)
+        return ctx.single.run_path(
+            s.path,
+            entropy_workers=(ENTROPY_PARALLEL_WORKERS
+                             if s.entropy == "parallel" else 0))
     if s.kind == KIND_LOADER:
         rec = ctx.loader(s.mode, s.source).run_path(s.path, s.workers)
         if s.source == "shard":

@@ -36,6 +36,12 @@ KIND_BATCHED = "batched"
 KIND_SERVICE_CLOSED = "service_closed"
 KIND_SERVICE_OPEN = "service_open"
 
+# Worker count for the parallel leg of the entropy axis: the acceptance
+# target is entropy-stage speedup at 4 workers on a DRI-dense corpus
+# (the resolver clamps to the host CPU count, so a smaller runner
+# measures what it can and records the clamp).
+ENTROPY_PARALLEL_WORKERS = 4
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -47,6 +53,10 @@ class Scenario:
     workers: int = 0
     mode: str = ""                 # thread | process for loader cells
     source: str = "memory"         # memory | shard for loader cells
+    entropy: str = "serial"        # serial | parallel: the single-thread
+                                   # interval-parallel entropy axis
+                                   # (suffixless = serial, so existing
+                                   # compare keys stay stable)
 
 
 def build_registry() -> List[Scenario]:
@@ -54,9 +64,16 @@ def build_registry() -> List[Scenario]:
     emission order (decoder registration order)."""
     names = decoder_names()
     batchable = {s.name for s in list_decoders(batchable=True)}
+    parallel_entropy = {s.name for s in list_decoders()
+                        if s.caps.parallel_entropy}
     out: List[Scenario] = []
     for p in names:
         out.append(Scenario(f"single/{p}", KIND_SINGLE, path=p))
+        if p in parallel_entropy:
+            # the entropy axis twin: same decode path, entropy decode
+            # requested interval-parallel at ENTROPY_PARALLEL_WORKERS
+            out.append(Scenario(f"single/{p}/entropy-par", KIND_SINGLE,
+                                path=p, entropy="parallel"))
     for p in names:
         for w in WORKER_SWEEP:
             # w=0 decodes inline in the consumer; pool mode is moot, so
@@ -105,11 +122,21 @@ class Profile:
     service_closed: FrozenSet[int]
     service_open: FrozenSet[int]
     budget_s: float                # advisory wall-clock target
+    # entropy-axis budget: which paths run the parallel entropy twin
+    # (None = all that emit one), and the restart-interval pool the
+    # profile's corpus draws from (() = no DRI, so the smoke corpus —
+    # and its committed fingerprint — is bit-identical to before)
+    single_entropy: Optional[FrozenSet[str]] = frozenset()
+    corpus_dri: Tuple[int, ...] = ()
 
     def wants(self, s: Scenario) -> Tuple[bool, str]:
         """(run?, reason-if-skipped) for one scenario under this profile."""
         if s.kind == KIND_SINGLE:
-            if self.single_paths is None or s.path in self.single_paths:
+            if s.entropy == "parallel":
+                if self.single_entropy is None \
+                        or s.path in self.single_entropy:
+                    return True, ""
+            elif self.single_paths is None or s.path in self.single_paths:
                 return True, ""
         elif s.kind == KIND_LOADER:
             if self.loader_cells is None or \
@@ -169,7 +196,12 @@ PROFILES: Dict[str, Profile] = {
         batched_paths=frozenset({"jnp-batch"}),
         service_closed=frozenset({2}),
         service_open=frozenset(),
-        budget_s=240.0),
+        budget_s=240.0,
+        # smoke keeps its no-DRI corpus (committed fingerprint stays
+        # valid); the entropy-par cells therefore exercise and record
+        # the serial fallback discipline, not a speedup
+        single_entropy=frozenset({"numpy-fast", "jnp-fused"}),
+        corpus_dri=()),
     "quick": Profile(
         name="quick", corpus_n=48, corpus_seed=42,
         st_repeats=2, loader_repeats=1,
@@ -182,7 +214,14 @@ PROFILES: Dict[str, Profile] = {
         batched_paths=frozenset({"jnp-batch"}),
         service_closed=frozenset({0, 2}),
         service_open=frozenset({2}),
-        budget_s=900.0),
+        budget_s=900.0,
+        # the DRI-dense corpus the interval-parallel acceptance target
+        # is measured on: ~5/6 of images carry restart markers at 2-8
+        # MCUs per segment (0 keeps a no-DRI minority so the recorded
+        # serial fallback stays exercised too)
+        single_entropy=frozenset({"numpy-fast", "jnp-fused",
+                                  "numpy-sparse"}),
+        corpus_dri=(0, 2, 2, 4, 4, 8)),
     "full": Profile(
         name="full", corpus_n=200, corpus_seed=42,
         st_repeats=3, loader_repeats=2,
@@ -192,7 +231,9 @@ PROFILES: Dict[str, Profile] = {
         batched_paths=None,
         service_closed=frozenset(WORKER_SWEEP),
         service_open=frozenset(WORKER_SWEEP[1:]),
-        budget_s=7200.0),
+        budget_s=7200.0,
+        single_entropy=None,           # every parallel-entropy decoder
+        corpus_dri=(0, 0, 2, 4, 8, 16)),
 }
 
 

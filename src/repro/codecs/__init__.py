@@ -19,7 +19,8 @@ and keeps ``DECODE_PATHS``/``get_path``/``list_paths`` as deprecation
 shims over this registry for one release.
 """
 from repro.codecs.capabilities import (Capabilities, Eligibility,
-                                       ExecContext, eligible)
+                                       ExecContext, eligible,
+                                       resolve_entropy_workers)
 from repro.codecs.outcome import DecodeOutcome, outcome_of
 from repro.codecs.probe import BucketKey, probe_key
 from repro.codecs.registry import (DecoderSpec, as_spec, decoder_names,
@@ -29,6 +30,7 @@ from repro.codecs.session import Decoder, IneligibleDecoder, open_decoder
 
 __all__ = [
     "Capabilities", "Eligibility", "ExecContext", "eligible",
+    "resolve_entropy_workers",
     "DecodeOutcome", "outcome_of",
     "BucketKey", "probe_key",
     "DecoderSpec", "as_spec", "decoder_names", "get_decoder",

@@ -31,7 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+import os
+from typing import Optional, Tuple
 
 
 class ExecContext(enum.Enum):
@@ -65,6 +66,10 @@ class Capabilities:
                                      # launch per same-structure group)
     headers_only_probe: bool = True  # bucket key derivable without the
                                      # O(file-size) entropy scan
+    parallel_entropy: bool = False   # honors the interval-parallel
+                                     # entropy_workers knob (decodes DRI
+                                     # segments concurrently; see
+                                     # DESIGN.md §10)
 
     def __post_init__(self):
         if self.fork_safe is None:
@@ -99,3 +104,40 @@ def eligible(caps: Capabilities, context: ExecContext) -> Eligibility:
             "fork-safe (jax runtime state does not survive forked workers; "
             "see DESIGN.md §6)")
     return Eligibility(True)
+
+
+def resolve_entropy_workers(caps: Capabilities, context: ExecContext,
+                            requested: int) -> Tuple[int, str]:
+    """Resolve a requested interval-parallel ``entropy_workers`` count
+    for a (capabilities, context) pairing — the entropy analogue of
+    ``eligible``, and like it the ONLY place these rules live.
+
+    Returns ``(effective_workers, reason)``; ``reason`` is non-empty iff
+    the request was demoted (it lands verbatim in session/loader stats
+    and bench record meta, so a demotion is visible, never silent).
+
+    Rules (DESIGN.md §10): the decoder must advertise
+    ``parallel_entropy``; decode running inside forked pool workers
+    (``PROCESS_POOL``) may not fork a nested segment executor; and a
+    single-CPU host is capped to serial — segment decode is CPU-bound,
+    so oversubscribing one core only adds dispatch overhead. Requests
+    above the host CPU count are clamped to it.
+    """
+    if not isinstance(context, ExecContext):
+        raise TypeError(f"context must be an ExecContext, got {context!r}")
+    requested = int(requested)
+    if requested <= 1:
+        return max(requested, 1), ""
+    if not caps.parallel_entropy:
+        return 1, ("decoder does not advertise parallel_entropy; "
+                   "segment-parallel decode demoted to serial")
+    if context is ExecContext.PROCESS_POOL:
+        return 1, ("process-pool workers may not fork a nested entropy "
+                   "executor; demoted to serial in-worker decode")
+    cpus = os.cpu_count() or 1
+    if cpus <= 1:
+        return 1, "single-CPU host: segment-parallel decode has no cores to use"
+    if requested > cpus:
+        return cpus, (f"entropy_workers={requested} clamped to "
+                      f"{cpus} host CPUs")
+    return requested, ""

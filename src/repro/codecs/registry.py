@@ -105,6 +105,7 @@ def register_decoder(name: str, fn: Optional[Callable] = None, *,
                      engine: str = "numpy", strict: bool = False,
                      fork_safe: Optional[bool] = None,
                      headers_only_probe: bool = True,
+                     parallel_entropy: bool = False,
                      batch_fn: Optional[Callable] = None,
                      description: str = "", replace: bool = False):
     """Register a decoder; usable as a decorator or a direct call.
@@ -131,6 +132,7 @@ def register_decoder(name: str, fn: Optional[Callable] = None, *,
             register_decoder(name, f, caps=caps, engine=engine,
                              strict=strict, fork_safe=fork_safe,
                              headers_only_probe=headers_only_probe,
+                             parallel_entropy=parallel_entropy,
                              batch_fn=batch_fn, description=description,
                              replace=replace)
             return f
@@ -146,7 +148,8 @@ def register_decoder(name: str, fn: Optional[Callable] = None, *,
                             fork_safe=(engine == "numpy"
                                        if fork_safe is None else fork_safe),
                             batchable=batch_fn is not None,
-                            headers_only_probe=headers_only_probe)
+                            headers_only_probe=headers_only_probe,
+                            parallel_entropy=parallel_entropy)
     elif caps.batchable != (batch_fn is not None):
         # batchable's ground truth IS the batch entry point: an explicit
         # caps= must not advertise batching it doesn't have (or hide the

@@ -18,12 +18,15 @@ session so lifecycle bugs surface as errors, not silent reuse.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import List, Sequence
 
-from repro.codecs.capabilities import Capabilities, ExecContext, eligible
+from repro.codecs.capabilities import (Capabilities, ExecContext, eligible,
+                                       resolve_entropy_workers)
 from repro.codecs.outcome import DecodeOutcome, outcome_of
 from repro.codecs.probe import BucketKey, probe_key
 from repro.codecs.registry import DecoderSpec, as_spec
+from repro.jpeg import huffman
 from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
 
 
@@ -34,10 +37,23 @@ class IneligibleDecoder(RuntimeError):
 class Decoder:
     """One open decode session: a decoder bound to an ExecContext."""
 
-    def __init__(self, spec: DecoderSpec, context: ExecContext):
+    def __init__(self, spec: DecoderSpec, context: ExecContext,
+                 entropy_workers: int = 0):
         self.spec = spec
         self.context = context
         self._closed = False
+        # interval-parallel entropy decode: 0 = leave the ambient/env
+        # default in force; >=1 = resolve the request against this
+        # (caps, context) pairing and pin it for every decode in the
+        # session. A demotion is recorded, never silent (DESIGN.md §10).
+        requested = int(entropy_workers)
+        if requested > 0:
+            eff, reason = resolve_entropy_workers(
+                spec.caps, context, requested)
+        else:
+            eff, reason = 0, ""
+        self.entropy_workers = eff
+        self.entropy_demotion = reason
 
     # ------------------------------------------------------------ identity
     @property
@@ -79,6 +95,13 @@ class Decoder:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def _entropy_scope(self):
+        """Context pinning the session's resolved entropy_workers around
+        a decode call (workers=0: no-op, ambient default stays)."""
+        if self.entropy_workers > 0:
+            return huffman.entropy_workers(self.entropy_workers)
+        return contextlib.nullcontext()
+
     # ------------------------------------------------------------ decoding
     def decode(self, data: bytes) -> DecodeOutcome:
         """Decode one JPEG to a typed outcome. Decode-domain failures
@@ -86,7 +109,8 @@ class Decoder:
         anything else is a programming error and propagates."""
         self._check_open()
         try:
-            img = self.spec.fn(data)
+            with self._entropy_scope():
+                img = self.spec.fn(data)
         except UnsupportedJpeg as e:
             return DecodeOutcome.of_skip(e)
         except CorruptJpeg as e:
@@ -98,7 +122,9 @@ class Decoder:
         and failures come back in place (batch-mates are unaffected); a
         batch-wide explosion in a registered batch_fn propagates."""
         self._check_open()
-        return [outcome_of(r) for r in self.spec.decode_batch(list(datas))]
+        with self._entropy_scope():
+            raw = self.spec.decode_batch(list(datas))
+        return [outcome_of(r) for r in raw]
 
     def probe(self, data: bytes, granularity: int = 4) -> BucketKey:
         """Headers-only bucket identity (micro-batching / admission key)."""
@@ -110,13 +136,21 @@ class Decoder:
         return probe_key(data, granularity)
 
 
-def open_decoder(path, context: ExecContext = ExecContext.INLINE) -> Decoder:
+def open_decoder(path, context: ExecContext = ExecContext.INLINE,
+                 entropy_workers: int = 0) -> Decoder:
     """Open a decode session for ``path`` (a registered name, a
     DecoderSpec, or a legacy path-like object) in ``context``.
 
     Raises ``IneligibleDecoder`` — with the resolver's canonical reason —
     when the capability/context pairing is vetoed, so an ineligible
     deployment fails at open time instead of deep inside a worker pool.
+
+    ``entropy_workers > 0`` requests interval-parallel entropy decode for
+    the session; the request is resolved (and possibly demoted, with the
+    reason on ``Decoder.entropy_demotion``) by
+    ``resolve_entropy_workers`` — demotion is recorded, not an error,
+    because a no-DRI corpus or 1-CPU host is a deployment fact, not a
+    misconfiguration. ``0`` leaves the ambient/env default in force.
     """
     spec = as_spec(path)
     verdict = eligible(spec.caps, context)
@@ -124,4 +158,4 @@ def open_decoder(path, context: ExecContext = ExecContext.INLINE) -> Decoder:
         raise IneligibleDecoder(
             f"decode path {spec.name!r} in context {context}: "
             f"{verdict.reason}")
-    return Decoder(spec, context)
+    return Decoder(spec, context, entropy_workers=entropy_workers)

@@ -61,12 +61,17 @@ class SingleThreadProtocol:
         self.warmup = warmup
         self.platform = platform
 
-    def run_path(self, path) -> RunRecord:
+    def run_path(self, path, entropy_workers: int = 0) -> RunRecord:
         spec = as_spec(path)
         files = self.corpus.files
         skips: Set[int] = set()
 
-        with open_decoder(spec, context=ExecContext.INLINE) as dec:
+        stats0 = {}
+        if entropy_workers > 0:
+            from repro.jpeg import huffman
+            stats0 = huffman.entropy_stats()
+        with open_decoder(spec, context=ExecContext.INLINE,
+                          entropy_workers=entropy_workers) as dec:
             def one_pass() -> int:
                 delivered = 0
                 for i, f in enumerate(files):
@@ -89,6 +94,20 @@ class SingleThreadProtocol:
                 delivered = one_pass()
                 dt = time.perf_counter() - t0
                 samples.append(delivered / dt if dt > 0 else 0.0)
+        meta = {"engine": spec.caps.engine, "strict": spec.caps.strict,
+                "delivered": delivered}
+        if entropy_workers > 0:
+            # the entropy axis is never silent: record what was requested,
+            # what the resolver granted, and what decode actually did
+            # (parallel vs recorded serial fallbacks) over this cell
+            from repro.jpeg import huffman
+            delta = {k: v - stats0.get(k, 0)
+                     for k, v in huffman.entropy_stats().items()
+                     if v - stats0.get(k, 0)}
+            meta["entropy"] = {"requested": entropy_workers,
+                               "workers": dec.entropy_workers,
+                               "demotion": dec.entropy_demotion,
+                               "decodes": delta}
         return RunRecord(
             platform=self.platform, decoder=spec.name,
             protocol="single_thread", workers=0, mode="",
@@ -97,8 +116,7 @@ class SingleThreadProtocol:
             if len(samples) > 1 else 0.0,
             samples=samples, num_images=len(files),
             skip_indices=sorted(skips),
-            meta={"engine": spec.caps.engine, "strict": spec.caps.strict,
-                  "delivered": delivered})
+            meta=meta)
 
     def run(self, paths: Optional[Sequence[str]] = None) -> List[RunRecord]:
         names = paths or decoder_names()

@@ -59,6 +59,12 @@ class LoaderConfig:
     shuffle_window: int = 0           # 0 = full-permutation shuffle; >0 =
                                       # streaming window shuffle (storage-
                                       # friendly; see repro.store.sampler)
+    entropy_workers: int = 0          # interval-parallel entropy decode
+                                      # inside each decode call; 0 =
+                                      # ambient default. Resolved against
+                                      # the path's capabilities and this
+                                      # loader's exec context (demotions
+                                      # recorded in stats(); DESIGN.md §10)
 
 
 class SkipLedger:
@@ -171,12 +177,48 @@ class DataLoader:
         if self.decode_fn is None:
             raise ValueError("DataLoader needs decode_fn or a registered "
                              "path_name")
+        self._resolve_entropy()
         self.ledger = SkipLedger()
         self.epoch = 0
         self.cursor = 0
         self._latencies: List[float] = []
         self._pool = None                # process mode: reused across epochs
         self._pool_finalizer = None
+
+    def _resolve_entropy(self) -> None:
+        """Resolve the interval-parallel entropy_workers request for this
+        loader's (path capabilities, exec context) pairing and pin the
+        effective count around every decode call. Worker threads run in
+        their own contextvars context, so the pin wraps the decode fns
+        themselves rather than the submitting thread."""
+        cfg = self.cfg
+        requested = int(cfg.entropy_workers)
+        if requested <= 0:
+            self.entropy_workers, self.entropy_demotion = 0, ""
+            return
+        from repro.codecs import (ExecContext, get_decoder,
+                                  resolve_entropy_workers)
+        context = (ExecContext.INLINE if cfg.num_workers == 0 else
+                   ExecContext.PROCESS_POOL if cfg.mode == "process" else
+                   ExecContext.THREAD_POOL)
+        if self.path_name is not None:
+            caps = get_decoder(self.path_name).caps
+            eff, reason = resolve_entropy_workers(caps, context, requested)
+        else:
+            eff, reason = 1, ("unregistered decode_fn does not advertise "
+                              "parallel_entropy; demoted to serial")
+        self.entropy_workers, self.entropy_demotion = eff, reason
+        if eff > 0:
+            from repro.jpeg import huffman
+
+            def _pin(fn):
+                def wrapped(*a, **kw):
+                    with huffman.entropy_workers(eff):
+                        return fn(*a, **kw)
+                return wrapped
+            self.decode_fn = _pin(self.decode_fn)
+            if self.batch_decode_fn is not None:
+                self.batch_decode_fn = _pin(self.batch_decode_fn)
 
     # ------------------------------------------------------------ state
     def stats(self) -> Dict[str, Any]:
@@ -187,9 +229,14 @@ class DataLoader:
         # module-level repro.core import would be circular
         from repro.core.stats import percentile
         lat = list(self._latencies)
-        return {"latency_p50_s": percentile(lat, 0.50),
-                "latency_p99_s": percentile(lat, 0.99),
-                "measured_items": len(lat), "skips": self.ledger.count}
+        out = {"latency_p50_s": percentile(lat, 0.50),
+               "latency_p99_s": percentile(lat, 0.99),
+               "measured_items": len(lat), "skips": self.ledger.count}
+        if self.cfg.entropy_workers > 0:
+            out["entropy_workers"] = self.entropy_workers
+            if self.entropy_demotion:
+                out["entropy_demotion"] = self.entropy_demotion
+        return out
 
     def state(self) -> Dict[str, Any]:
         return {"epoch": self.epoch, "cursor": self.cursor,

@@ -65,10 +65,18 @@ def zipf_indices(n_items: int, n_requests: int,
 
 def build_corpus(n: int = 200, *, seed: int = 0,
                  sizes: Optional[List[Tuple[int, int]]] = None,
-                 num_classes: int = 10) -> Corpus:
+                 num_classes: int = 10,
+                 restart_intervals: Optional[List[int]] = None) -> Corpus:
+    """``restart_intervals`` sweeps DRI density: each non-rare image draws
+    its restart interval (in MCUs; 0 = no DRI) uniformly from the pool —
+    how the quick bench profile synthesizes the DRI-dense corpus the
+    interval-parallel entropy axis needs. ``None`` draws nothing, leaving
+    the RNG stream — and therefore the corpus fingerprint — exactly as
+    before the knob existed."""
     rng = np.random.RandomState(seed)
     size_pool = sizes or [(64, 64), (64, 96), (96, 96), (96, 128),
                           (128, 128)]
+    ri_pool = list(restart_intervals) if restart_intervals else []
     rare = scaled_rare_index(n)
     files, dims = [], []
     labels = rng.randint(0, num_classes, size=n)
@@ -80,8 +88,11 @@ def build_corpus(n: int = 200, *, seed: int = 0,
         else:
             q = int(rng.choice([60, 75, 85, 92, 95]))
             sub = "420" if rng.rand() < 0.7 else "444"
+            ri = (int(ri_pool[int(rng.randint(len(ri_pool)))])
+                  if ri_pool else 0)
             files.append(encoder.encode_jpeg(img, quality=q,
-                                             subsampling=sub))
+                                             subsampling=sub,
+                                             restart_interval=ri))
         dims.append((h, w))
     return Corpus(files=files, labels=labels, rare_index=rare, sizes=dims)
 

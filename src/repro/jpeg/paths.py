@@ -70,8 +70,9 @@ def _entropy(data: bytes, strict: bool):
         spec = P.parse(data)
         if strict:
             P.check_strict(spec)
-    with trace.span("jpeg.entropy"):
-        coef = huffman.decode_coefficients(spec)
+    # huffman.decode_coefficients emits the jpeg.entropy span itself
+    # (it carries the serial/parallel mode + fallback args)
+    coef = huffman.decode_coefficients(spec)
     return spec, coef
 
 
@@ -282,11 +283,14 @@ def _pallas_decode_batch(datas: List[bytes], strict: bool = False) -> List:
 # ------------------------------------------------------------ registration
 def _register(name, fn, *, engine="numpy", strict=False, batch_fn=None,
               description=""):
+    # every built-in path funnels entropy decode through huffman, so all
+    # of them honor the interval-parallel entropy_workers knob
     register_decoder(
         name, fn,
         caps=Capabilities(engine=engine, strict=strict,
                           fork_safe=(engine == "numpy"),
-                          batchable=batch_fn is not None),
+                          batchable=batch_fn is not None,
+                          parallel_entropy=True),
         batch_fn=batch_fn, description=description)
 
 
@@ -353,12 +357,14 @@ class DecodePath:
     engine: str = "numpy"             # numpy | jnp | pallas
     description: str = ""
     batch_fn: Optional[Callable[[List[bytes]], List]] = None
+    parallel_entropy: bool = False    # ad-hoc shims stay serial-only
 
     @property
     def caps(self) -> Capabilities:
         return Capabilities(engine=self.engine, strict=self.strict,
                             fork_safe=self.process_eligible,
-                            batchable=self.batch_fn is not None)
+                            batchable=self.batch_fn is not None,
+                            parallel_entropy=self.parallel_entropy)
 
     def decode(self, data: bytes) -> np.ndarray:
         return self.fn(data)
@@ -380,7 +386,8 @@ def _path_of(spec: DecoderSpec) -> DecodePath:
     path = DecodePath(name=spec.name, fn=spec.fn, strict=spec.caps.strict,
                       process_eligible=spec.caps.fork_safe,
                       engine=spec.caps.engine,
-                      description=spec.description, batch_fn=spec.batch_fn)
+                      description=spec.description, batch_fn=spec.batch_fn,
+                      parallel_entropy=spec.caps.parallel_entropy)
     _PATH_CACHE[spec.name] = (spec, path)
     return path
 

@@ -40,7 +40,7 @@ from typing import Dict, Iterable, List, Optional
 
 __all__ = [
     "NullTracer", "Tracer", "get_tracer", "set_tracer", "use_tracer",
-    "span", "instant", "counter", "flush", "init_worker",
+    "span", "instant", "counter", "complete", "flush", "init_worker",
     "merge_shards", "write_chrome_trace", "stage_seconds",
 ]
 
@@ -79,6 +79,10 @@ class NullTracer:
         pass
 
     def counter(self, name: str, value: float) -> None:
+        pass
+
+    def complete(self, name: str, t0: float, dur: float, cat: str = "",
+                 args: Optional[dict] = None) -> None:
         pass
 
     def events(self) -> List[dict]:
@@ -165,6 +169,15 @@ class Tracer:
         """Chrome 'C' counter sample (e.g. queue depth over time)."""
         self._emit(name, "", "C", time.monotonic(), None,
                    {"value": float(value)})
+
+    def complete(self, name: str, t0: float, dur: float, cat: str = "",
+                 args: Optional[dict] = None) -> None:
+        """Complete-span with explicit monotonic start + duration — for
+        attributing work measured elsewhere onto this process's timeline
+        (e.g. entropy-segment timings returned by executor workers).
+        CLOCK_MONOTONIC is system-wide on Linux, so the timestamps line
+        up with locally-recorded spans."""
+        self._emit(name, cat, "X", t0, dur, args)
 
     def _emit(self, name: str, cat: str, ph: str, t0: float,
               dur: Optional[float], args: Optional[dict]) -> None:
@@ -273,6 +286,11 @@ def instant(name: str, cat: str = "", **args) -> None:
 
 def counter(name: str, value: float) -> None:
     _current.counter(name, value)
+
+
+def complete(name: str, t0: float, dur: float, cat: str = "",
+             **args) -> None:
+    _current.complete(name, t0, dur, cat, args or None)
 
 
 def flush() -> None:

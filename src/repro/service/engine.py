@@ -66,6 +66,9 @@ class ServiceConfig:
     epsilon: float = 0.1
     seed: int = 0
     congestion: float = 0.75        # fairness kicks in past this fill
+    entropy_workers: int = 0        # interval-parallel entropy decode per
+                                    # arm session; 0 = ambient default
+                                    # (resolved per caps, DESIGN.md §10)
 
 
 @dataclasses.dataclass
@@ -258,7 +261,8 @@ class DecodeService:
         equivalent session."""
         sess = self._sessions.get(arm.name)
         if sess is None:
-            sess = open_decoder(arm, context=ExecContext.SERVICE)
+            sess = open_decoder(arm, context=ExecContext.SERVICE,
+                                entropy_workers=self.cfg.entropy_workers)
             self._sessions[arm.name] = sess
         return sess
 

@@ -95,6 +95,39 @@ def test_fork_initializer_module_function_ok():
     assert found == []
 
 
+def test_fork_rules_cover_executor_plumbing():
+    # ProcessPoolExecutor is a pool ctor too: shipping materialized
+    # bytes or a bound-method initializer through it is the same bug
+    found = run("""
+        from concurrent.futures import ProcessPoolExecutor
+        class C:
+            def go(self):
+                ProcessPoolExecutor(2, initializer=init,
+                                    initargs=(bytes(self.blob),))
+        """, "fork-initargs-bytes")
+    assert rule_ids(found) == ["fork-initargs-bytes"]
+    found = run("""
+        from concurrent.futures import ProcessPoolExecutor
+        class C:
+            def go(self):
+                ProcessPoolExecutor(2, initializer=self._init)
+        """, "fork-initializer-closure")
+    assert rule_ids(found) == ["fork-initializer-closure"]
+
+
+def test_fork_rules_allow_bare_executor():
+    # the huffman entropy executor: fork context, no initializer, no
+    # initargs — nothing crosses the fork by value
+    found = run("""
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+        def build(n):
+            return ProcessPoolExecutor(
+                max_workers=n, mp_context=mp.get_context("fork"))
+        """, "fork-initargs-bytes")
+    assert found == []
+
+
 # ---------------------------------------------------- lock discipline
 LOCKED_CLASS = """
     class Ledger:

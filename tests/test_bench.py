@@ -94,6 +94,16 @@ def test_registry_covers_matrix():
     # single-thread cells are memory-only by definition
     assert all(s.source == "memory" for s in scenarios
                if s.kind == "single_thread")
+    # the entropy axis: every parallel-entropy decoder's serial cell has
+    # an /entropy-par twin (suffixless = serial, compare keys stable)
+    from repro.codecs import list_decoders
+    par = {s.name for s in list_decoders() if s.caps.parallel_entropy}
+    assert par                                # built-ins all advertise it
+    twins = {s.path for s in scenarios if s.entropy == "parallel"}
+    assert twins == par
+    serial_names = {s.name for s in scenarios if s.entropy == "serial"}
+    for p in par:
+        assert f"single/{p}" in serial_names
 
 
 def test_select_scenarios_prefix_and_errors():
@@ -101,8 +111,12 @@ def test_select_scenarios_prefix_and_errors():
     assert picked and all(s.path == "numpy-fast" for s in picked)
     # (w0 + {2,4,8} x {thread,process}) x {memory,shard}
     assert len(picked) == 14
+    # 'single/jnp-fused' is both an exact name and a '/'-boundary prefix
+    # of its entropy-axis twin
     exact = select_scenarios(["single/jnp-fused"])
-    assert [s.name for s in exact] == ["single/jnp-fused"]
+    assert [s.name for s in exact] == ["single/jnp-fused",
+                                       "single/jnp-fused/entropy-par"]
+    assert {s.entropy for s in exact} == {"serial", "parallel"}
     with pytest.raises(BenchSelectionError, match="single/numpy-ref"):
         select_scenarios(["single/nvjpeg"])
 
@@ -229,7 +243,9 @@ def test_traced_sweep_writes_perfetto_artifact_and_stage_s(tmp_path):
 def test_untraced_sweep_has_no_stage_s(tmp_path):
     res = run_sweep("smoke", only=["single/numpy-fast"],
                     out_dir=str(tmp_path))
-    (rec,) = res.records
+    # the token also prefix-selects the entropy-par twin
+    by_name = {r.scenario: r for r in res.records}
+    rec = by_name["single/numpy-fast"]
     assert rec.ok and "stage_s" not in rec.meta
     assert res.trace_path is None
     assert not os.path.exists(tmp_path / "trace_smoke.json")

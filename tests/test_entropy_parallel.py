@@ -1,0 +1,224 @@
+"""Interval-parallel entropy decode: parity, corruption, and fallback.
+
+The tentpole invariant: decode across restart-interval segments in a
+process pool is **byte-identical** to serial decode, for every worker
+count and restart density, including the corpus's YCCK image. Corrupt
+streams must raise ``CorruptJpeg`` under both modes — a missing RSTn,
+a truncated final segment, or a DRI declaration with no markers must
+never hang or misdecode. Fallbacks (no-DRI input, demoted requests) are
+recorded, never silent (DESIGN.md §10).
+"""
+import numpy as np
+import pytest
+
+from repro.codecs import (Capabilities, ExecContext, get_decoder,
+                          open_decoder, resolve_entropy_workers)
+from repro.jpeg import encoder, huffman
+from repro.jpeg import parser as P
+from repro.jpeg.parser import CorruptJpeg
+
+
+def _img(h=64, w=64, seed=0):
+    rng = np.random.RandomState(seed)
+    return (rng.rand(h, w, 3) * 255).astype(np.uint8)
+
+
+def _decode(data, workers):
+    spec = P.parse(data)
+    return huffman.decode_coefficients(spec, workers=workers)
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("interval", [0, 1, 2, 5])
+@pytest.mark.parametrize("sub", ["444", "420"])
+def test_parity_across_workers_and_densities(sub, interval):
+    data = encoder.encode_jpeg(_img(96, 128, seed=1), quality=90,
+                               subsampling=sub,
+                               restart_interval=interval)
+    ref = _decode(data, workers=1)
+    for workers in (2, 4):
+        got = _decode(data, workers=workers)
+        assert set(got) == set(ref)
+        for cid in ref:
+            np.testing.assert_array_equal(got[cid], ref[cid],
+                                          err_msg=f"w={workers} cid={cid}")
+
+
+def test_parity_on_corpus_with_ycck(corpus):
+    """Full pixel parity through a real decode path over the session
+    corpus (includes the rare YCCK image) re-encoded at mixed restart
+    densities."""
+    dec = get_decoder("numpy-fast")
+    for i, f in enumerate(corpus.files):
+        ref = dec.fn(f)
+        with huffman.entropy_workers(4):
+            par = dec.fn(f)
+        np.testing.assert_array_equal(ref, par, err_msg=f"image {i}")
+
+
+def test_parity_dri_dense_corpus():
+    from repro.jpeg.corpus import build_corpus
+    c = build_corpus(6, seed=3, restart_intervals=[1, 2, 4])
+    dec = get_decoder("numpy-fast")
+    n_dri = sum(b"\xff\xdd" in bytes(f) for f in c.files)
+    assert n_dri >= 4                  # the knob actually emitted DRI
+    for f in c.files:
+        with huffman.entropy_workers(2):
+            a = dec.fn(f)
+        with huffman.entropy_workers(1):
+            b = dec.fn(f)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_corpus_without_knob_is_bit_identical():
+    """restart_intervals=None must not perturb the RNG stream: the
+    committed smoke-baseline fingerprint depends on it."""
+    from repro.jpeg.corpus import build_corpus, corpus_fingerprint
+    a = build_corpus(8, seed=42)
+    b = build_corpus(8, seed=42, restart_intervals=None)
+    assert corpus_fingerprint(a) == corpus_fingerprint(b)
+    c = build_corpus(8, seed=42, restart_intervals=[2])
+    assert corpus_fingerprint(c) != corpus_fingerprint(a)
+
+
+# ------------------------------------------------------------- corruption
+@pytest.mark.parametrize("workers", [1, 4])
+def test_missing_rst_marker_raises(workers):
+    data = encoder.encode_jpeg(_img(96, 96, seed=2), quality=85,
+                               subsampling="420", restart_interval=1)
+    spec = P.parse(data)
+    assert len(huffman._restart_segments(spec.scan_data)) > 2
+    # strip one RSTn marker: the scan now has one segment too few
+    scan = bytes(spec.scan_data)
+    for n in range(8):
+        marker = bytes([0xFF, 0xD0 + n])
+        if marker in scan:
+            broken = scan.replace(marker, b"", 1)
+            break
+    spec2 = P.parse(data.replace(scan, broken, 1))
+    with pytest.raises(CorruptJpeg, match="missing RST"):
+        huffman.decode_coefficients(spec2, workers=workers)
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_truncated_final_segment_raises(workers):
+    data = encoder.encode_jpeg(_img(96, 96, seed=2), quality=92,
+                               subsampling="444", restart_interval=2)
+    eoi = data.rfind(b"\xff\xd9")
+    assert eoi > 0
+    # cut real entropy bytes out of the last segment but keep EOI, so
+    # the parser still sees a well-formed container
+    truncated = data[:eoi - 40] + data[eoi:]
+    spec = P.parse(truncated)
+    with pytest.raises(CorruptJpeg):
+        huffman.decode_coefficients(spec, workers=workers)
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_dri_declared_but_no_markers_raises(workers):
+    plain = encoder.encode_jpeg(_img(96, 96, seed=2), quality=85,
+                                subsampling="420")
+    sos = plain.find(b"\xff\xda")
+    assert sos > 0 and b"\xff\xdd" not in plain
+    # splice a DRI=2 declaration before SOS: the scan carries no RSTn
+    forged = plain[:sos] + encoder._dri(2) + plain[sos:]
+    spec = P.parse(forged)
+    assert spec.restart_interval == 2
+    with pytest.raises(CorruptJpeg, match="missing RST"):
+        huffman.decode_coefficients(spec, workers=workers)
+
+
+# -------------------------------------------------------------- fallbacks
+def test_no_dri_falls_back_to_serial_recorded():
+    data = encoder.encode_jpeg(_img(seed=7), quality=85)
+    before = huffman.entropy_stats()
+    _decode(data, workers=4)
+    delta = {k: v - before.get(k, 0)
+             for k, v in huffman.entropy_stats().items()}
+    assert delta.get("serial_images") == 1
+    assert delta.get("fallback_no_dri") == 1
+    assert not delta.get("parallel_images")
+
+
+def test_parallel_decode_counted():
+    data = encoder.encode_jpeg(_img(96, 96, seed=8), quality=85,
+                               subsampling="420", restart_interval=2)
+    before = huffman.entropy_stats()
+    _decode(data, workers=2)
+    delta = {k: v - before.get(k, 0)
+             for k, v in huffman.entropy_stats().items()}
+    assert delta.get("parallel_images") == 1
+    assert delta.get("segments_parallel", 0) > 1
+
+
+def test_env_default_parsing(monkeypatch):
+    monkeypatch.setenv("REPRO_ENTROPY_WORKERS", "3")
+    assert huffman._env_default() == 3
+    monkeypatch.setenv("REPRO_ENTROPY_WORKERS", "not-a-number")
+    assert huffman._env_default() == 1
+    monkeypatch.setenv("REPRO_ENTROPY_WORKERS", "-2")
+    assert huffman._env_default() == 1
+
+
+def test_ambient_knob_nesting():
+    assert huffman.current_entropy_workers() == huffman._DEFAULT_WORKERS
+    with huffman.entropy_workers(4):
+        assert huffman.current_entropy_workers() == 4
+        with huffman.entropy_workers(1):
+            assert huffman.current_entropy_workers() == 1
+        assert huffman.current_entropy_workers() == 4
+    assert huffman.current_entropy_workers() == huffman._DEFAULT_WORKERS
+
+
+# -------------------------------------------------------------- resolution
+def test_resolver_rules():
+    caps = get_decoder("numpy-fast").caps
+    assert caps.parallel_entropy
+    eff, reason = resolve_entropy_workers(caps, ExecContext.PROCESS_POOL, 4)
+    assert eff == 1 and "process-pool" in reason
+    eff, reason = resolve_entropy_workers(caps, ExecContext.INLINE, 1)
+    assert (eff, reason) == (1, "")
+    no_par = Capabilities(engine="numpy")   # parallel_entropy defaults off
+    eff, reason = resolve_entropy_workers(no_par, ExecContext.INLINE, 4)
+    assert eff == 1 and "parallel_entropy" in reason
+    import os
+    cpus = os.cpu_count() or 1
+    eff, reason = resolve_entropy_workers(caps, ExecContext.INLINE, 4)
+    if cpus <= 1:
+        assert eff == 1 and "single-CPU" in reason
+    else:
+        assert eff == min(4, cpus)
+
+
+def test_session_records_resolution():
+    with open_decoder("numpy-fast", entropy_workers=4) as dec:
+        assert dec.entropy_workers >= 1
+        import os
+        if (os.cpu_count() or 1) <= 1:
+            assert dec.entropy_demotion
+        data = encoder.encode_jpeg(_img(seed=9), quality=85,
+                                   restart_interval=2)
+        assert dec.decode(data).ok
+    with open_decoder("numpy-fast") as dec:
+        assert dec.entropy_workers == 0 and dec.entropy_demotion == ""
+
+
+def test_loader_records_resolution():
+    from repro.data.loader import DataLoader, LoaderConfig
+    files = [encoder.encode_jpeg(_img(seed=i), quality=85,
+                                 restart_interval=2) for i in range(4)]
+    cfg = LoaderConfig(batch_size=2, num_workers=2, mode="thread",
+                       entropy_workers=4)
+    dl = DataLoader(files, [0, 1, 0, 1], path_name="numpy-fast", cfg=cfg)
+    batches = list(dl)
+    assert sum(len(b["label"]) for b in batches) == 4
+    st = dl.stats()
+    assert st["entropy_workers"] >= 1
+    import os
+    if (os.cpu_count() or 1) <= 1:
+        assert "entropy_demotion" in st
+    # ambient default untouched: no entropy keys when the knob is off
+    dl2 = DataLoader(files, [0, 1, 0, 1], path_name="numpy-fast",
+                     cfg=LoaderConfig(batch_size=2))
+    list(dl2)
+    assert "entropy_workers" not in dl2.stats()
