@@ -88,7 +88,9 @@ class _SweepContext:
         self._tmp_shards = None
         self._shard_source = None
         self._corpus = None
+        self._corpora: Dict[str, object] = {}
         self._single = None
+        self._singles: Dict[str, SingleThreadProtocol] = {}
         self._loaders: Dict[Tuple[str, str], LoaderProtocol] = {}
         self._stream = None
         self.peak_closed_ips = 0.0
@@ -154,6 +156,29 @@ class _SweepContext:
                 platform=self.platform)
         return self._single
 
+    def corpus_for(self, kind: str):
+        """The corpus-axis variants of the profile corpus: same n, seed,
+        and DRI pool, differing only in the progressive fraction (mixed
+        = half the non-rare images, progressive = all of them)."""
+        if kind == "baseline":
+            return self.corpus
+        if kind not in self._corpora:
+            frac = {"mixed": 0.5, "progressive": 1.0}[kind]
+            self._corpora[kind] = build_corpus(
+                self.profile.corpus_n, seed=self.profile.corpus_seed,
+                restart_intervals=list(self.profile.corpus_dri) or None,
+                progressive=frac)
+        return self._corpora[kind]
+
+    def single_for(self, kind: str) -> SingleThreadProtocol:
+        if kind == "baseline":
+            return self.single
+        if kind not in self._singles:
+            self._singles[kind] = SingleThreadProtocol(
+                self.corpus_for(kind), repeats=self.profile.st_repeats,
+                platform=self.platform, corpus_kind=kind)
+        return self._singles[kind]
+
     def close(self) -> None:
         if self._shard_source is not None:
             self._shard_source.close()
@@ -173,10 +198,13 @@ class _SweepContext:
 
 def _run_scenario(s: Scenario, ctx: _SweepContext) -> RunRecord:
     if s.kind == KIND_SINGLE:
-        return ctx.single.run_path(
+        rec = ctx.single_for(s.corpus).run_path(
             s.path,
             entropy_workers=(ENTROPY_PARALLEL_WORKERS
                              if s.entropy == "parallel" else 0))
+        if s.corpus != "baseline":
+            rec.meta["corpus"] = s.corpus
+        return rec
     if s.kind == KIND_LOADER:
         rec = ctx.loader(s.mode, s.source).run_path(s.path, s.workers)
         if s.source == "shard":

@@ -57,6 +57,13 @@ class Scenario:
                                    # interval-parallel entropy axis
                                    # (suffixless = serial, so existing
                                    # compare keys stay stable)
+    corpus: str = "baseline"       # baseline | mixed | progressive: the
+                                   # corpus-distribution axis (suffixless
+                                   # = baseline, so existing compare keys
+                                   # stay stable). Paths that lack
+                                   # Capabilities.progressive resolve
+                                   # non-baseline cells to schema-valid
+                                   # skip records, never errors.
 
 
 def build_registry() -> List[Scenario]:
@@ -74,6 +81,14 @@ def build_registry() -> List[Scenario]:
             # requested interval-parallel at ENTROPY_PARALLEL_WORKERS
             out.append(Scenario(f"single/{p}/entropy-par", KIND_SINGLE,
                                 path=p, entropy="parallel"))
+        # the corpus-distribution axis: the same single-thread protocol
+        # over a half-progressive ("mixed") and an all-progressive
+        # corpus. Emitted for EVERY path — baseline-only paths resolve
+        # these cells to capability-skip records, which is the point:
+        # the skip ledger, not cell absence, says who measured what.
+        for c in ("mixed", "progressive"):
+            out.append(Scenario(f"single/{p}/corpus-{c}", KIND_SINGLE,
+                                path=p, corpus=c))
     for p in names:
         for w in WORKER_SWEEP:
             # w=0 decodes inline in the consumer; pool mode is moot, so
@@ -128,11 +143,18 @@ class Profile:
     # and its committed fingerprint — is bit-identical to before)
     single_entropy: Optional[FrozenSet[str]] = frozenset()
     corpus_dri: Tuple[int, ...] = ()
+    # corpus-axis budget: which (path, corpus-kind) single-thread cells
+    # run over the non-baseline corpora (None = all emitted cells)
+    single_corpus: Optional[FrozenSet[Tuple[str, str]]] = frozenset()
 
     def wants(self, s: Scenario) -> Tuple[bool, str]:
         """(run?, reason-if-skipped) for one scenario under this profile."""
         if s.kind == KIND_SINGLE:
-            if s.entropy == "parallel":
+            if s.corpus != "baseline":
+                if self.single_corpus is None \
+                        or (s.path, s.corpus) in self.single_corpus:
+                    return True, ""
+            elif s.entropy == "parallel":
                 if self.single_entropy is None \
                         or s.path in self.single_entropy:
                     return True, ""
@@ -201,7 +223,13 @@ PROFILES: Dict[str, Profile] = {
         # valid); the entropy-par cells therefore exercise and record
         # the serial fallback discipline, not a speedup
         single_entropy=frozenset({"numpy-fast", "jnp-fused"}),
-        corpus_dri=()),
+        corpus_dri=(),
+        # one ok cell and one capability-skip cell: the artifact pair
+        # CI validates (mixed corpus decodes on a progressive-capable
+        # path; an all-progressive corpus on a strict/baseline-only
+        # path must yield schema-valid skip records)
+        single_corpus=frozenset({("jnp-fused", "mixed"),
+                                 ("strict-fast", "progressive")})),
     "quick": Profile(
         name="quick", corpus_n=48, corpus_seed=42,
         st_repeats=2, loader_repeats=1,
@@ -221,7 +249,17 @@ PROFILES: Dict[str, Profile] = {
         # serial fallback stays exercised too)
         single_entropy=frozenset({"numpy-fast", "jnp-fused",
                                   "numpy-sparse"}),
-        corpus_dri=(0, 2, 2, 4, 4, 8)),
+        corpus_dri=(0, 2, 2, 4, 4, 8),
+        # the corpus-axis measurement surface: numpy/jnp representatives
+        # on both corpora plus both strict paths (whose cells are the
+        # recorded capability skips the ledger analysis reads)
+        single_corpus=frozenset({("numpy-fast", "mixed"),
+                                 ("numpy-fast", "progressive"),
+                                 ("jnp-fused", "mixed"),
+                                 ("jnp-fused", "progressive"),
+                                 ("strict-fast", "mixed"),
+                                 ("strict-fast", "progressive"),
+                                 ("strict-turbo", "mixed")})),
     "full": Profile(
         name="full", corpus_n=200, corpus_seed=42,
         st_repeats=3, loader_repeats=2,
@@ -233,7 +271,8 @@ PROFILES: Dict[str, Profile] = {
         service_open=frozenset(WORKER_SWEEP[1:]),
         budget_s=7200.0,
         single_entropy=None,           # every parallel-entropy decoder
-        corpus_dri=(0, 0, 2, 4, 8, 16)),
+        corpus_dri=(0, 0, 2, 4, 8, 16),
+        single_corpus=None),           # every (path, corpus-kind) cell
 }
 
 

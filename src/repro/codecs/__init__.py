@@ -22,7 +22,8 @@ from repro.codecs.capabilities import (Capabilities, Eligibility,
                                        ExecContext, eligible,
                                        resolve_entropy_workers)
 from repro.codecs.outcome import DecodeOutcome, outcome_of
-from repro.codecs.probe import BucketKey, probe_key
+from repro.codecs.probe import (BucketKey, ProbeResult, probe_key,
+                                probe_outcome)
 from repro.codecs.registry import (DecoderSpec, as_spec, decoder_names,
                                    get_decoder, list_decoders,
                                    register_decoder, unregister_decoder)
@@ -32,7 +33,7 @@ __all__ = [
     "Capabilities", "Eligibility", "ExecContext", "eligible",
     "resolve_entropy_workers",
     "DecodeOutcome", "outcome_of",
-    "BucketKey", "probe_key",
+    "BucketKey", "ProbeResult", "probe_key", "probe_outcome",
     "DecoderSpec", "as_spec", "decoder_names", "get_decoder",
     "list_decoders", "register_decoder", "unregister_decoder",
     "Decoder", "IneligibleDecoder", "open_decoder",

@@ -70,6 +70,9 @@ class Capabilities:
                                      # entropy_workers knob (decodes DRI
                                      # segments concurrently; see
                                      # DESIGN.md §10)
+    progressive: bool = False        # decodes SOF2 multi-scan streams
+                                     # (baseline-only surfaces skip them;
+                                     # see DESIGN.md §11)
 
     def __post_init__(self):
         if self.fork_safe is None:
@@ -88,12 +91,18 @@ class Eligibility:
         return self.eligible
 
 
-def eligible(caps: Capabilities, context: ExecContext) -> Eligibility:
+def eligible(caps: Capabilities, context: ExecContext, *,
+             requires_progressive: bool = False) -> Eligibility:
     """THE eligibility rule — every harness asks here, nobody re-derives.
 
     Returns a truthy ``Eligibility`` or a falsy one whose ``reason`` is
     the canonical explanation (it is stored verbatim in skipped bench
     records and raised in loader errors).
+
+    ``requires_progressive=True`` adds the workload axis: the caller is
+    about to feed SOF2 streams wholesale (a progressive-corpus bench
+    cell), so a baseline-only decode surface is vetoed up front instead
+    of skipping every image one by one.
     """
     if not isinstance(context, ExecContext):
         raise TypeError(f"context must be an ExecContext, got {context!r}")
@@ -103,6 +112,12 @@ def eligible(caps: Capabilities, context: ExecContext) -> Eligibility:
             f"not process-loader eligible: engine {caps.engine!r} is not "
             "fork-safe (jax runtime state does not survive forked workers; "
             "see DESIGN.md §6)")
+    if requires_progressive and not caps.progressive:
+        return Eligibility(
+            False,
+            "not progressive-corpus eligible: decoder does not advertise "
+            "Capabilities.progressive (baseline-only decode surface; "
+            "see DESIGN.md §11)")
     return Eligibility(True)
 
 

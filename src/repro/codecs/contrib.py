@@ -51,7 +51,8 @@ def _register_pillow() -> bool:
 
     register_decoder(
         "pillow", decode,
-        caps=Capabilities(engine="pillow", strict=False, fork_safe=True),
+        caps=Capabilities(engine="pillow", strict=False, fork_safe=True,
+                          progressive=True),
         description="Pillow (libjpeg) — real-backend contrib plugin")
     _REGISTERED.append("pillow")
     return True
@@ -82,7 +83,8 @@ def _register_opencv() -> bool:
 
     register_decoder(
         "opencv", decode,
-        caps=Capabilities(engine="opencv", strict=False, fork_safe=True),
+        caps=Capabilities(engine="opencv", strict=False, fork_safe=True,
+                          progressive=True),
         description="OpenCV imdecode — real-backend contrib plugin")
     _REGISTERED.append("opencv")
     return True

@@ -106,6 +106,7 @@ def register_decoder(name: str, fn: Optional[Callable] = None, *,
                      fork_safe: Optional[bool] = None,
                      headers_only_probe: bool = True,
                      parallel_entropy: bool = False,
+                     progressive: bool = False,
                      batch_fn: Optional[Callable] = None,
                      description: str = "", replace: bool = False):
     """Register a decoder; usable as a decorator or a direct call.
@@ -133,6 +134,7 @@ def register_decoder(name: str, fn: Optional[Callable] = None, *,
                              strict=strict, fork_safe=fork_safe,
                              headers_only_probe=headers_only_probe,
                              parallel_entropy=parallel_entropy,
+                             progressive=progressive,
                              batch_fn=batch_fn, description=description,
                              replace=replace)
             return f
@@ -149,7 +151,8 @@ def register_decoder(name: str, fn: Optional[Callable] = None, *,
                                        if fork_safe is None else fork_safe),
                             batchable=batch_fn is not None,
                             headers_only_probe=headers_only_probe,
-                            parallel_entropy=parallel_entropy)
+                            parallel_entropy=parallel_entropy,
+                            progressive=progressive)
     elif caps.batchable != (batch_fn is not None):
         # batchable's ground truth IS the batch entry point: an explicit
         # caps= must not advertise batching it doesn't have (or hide the
@@ -229,7 +232,8 @@ def as_spec(path) -> DecoderSpec:
                 engine=getattr(path, "engine", "numpy"),
                 strict=getattr(path, "strict", False),
                 fork_safe=getattr(path, "process_eligible", True),
-                batchable=getattr(path, "batch_fn", None) is not None)
+                batchable=getattr(path, "batch_fn", None) is not None,
+                progressive=getattr(path, "progressive", False))
         return DecoderSpec(name=path.name, fn=path.fn, caps=caps,
                            batch_fn=getattr(path, "batch_fn", None),
                            description=getattr(path, "description", ""))

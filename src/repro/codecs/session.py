@@ -24,7 +24,8 @@ from typing import List, Sequence
 from repro.codecs.capabilities import (Capabilities, ExecContext, eligible,
                                        resolve_entropy_workers)
 from repro.codecs.outcome import DecodeOutcome, outcome_of
-from repro.codecs.probe import BucketKey, probe_key
+from repro.codecs.probe import (BucketKey, ProbeResult, probe_key,
+                                probe_outcome)
 from repro.codecs.registry import DecoderSpec, as_spec
 from repro.jpeg import huffman
 from repro.jpeg.parser import CorruptJpeg, UnsupportedJpeg
@@ -134,6 +135,19 @@ class Decoder:
                 f"decoder {self.spec.name!r} does not support "
                 "headers-only probing")
         return probe_key(data, granularity)
+
+    def probe_outcome(self, data: bytes,
+                      granularity: int = 4) -> ProbeResult:
+        """Admission probe against this session's capabilities: refusable
+        inputs (unsupported frame families, progressive streams on a
+        baseline-only decoder) come back as skip results instead of
+        exceptions (see ``codecs.probe.probe_outcome``)."""
+        self._check_open()
+        if not self.caps.headers_only_probe:
+            raise NotImplementedError(
+                f"decoder {self.spec.name!r} does not support "
+                "headers-only probing")
+        return probe_outcome(data, granularity, caps=self.caps)
 
 
 def open_decoder(path, context: ExecContext = ExecContext.INLINE,

@@ -55,14 +55,38 @@ def _loader_context(mode: str, workers: int) -> ExecContext:
 
 class SingleThreadProtocol:
     def __init__(self, corpus: Corpus, *, repeats: int = 3,
-                 warmup: bool = True, platform: str = "live-host"):
+                 warmup: bool = True, platform: str = "live-host",
+                 corpus_kind: str = "baseline"):
         self.corpus = corpus
         self.repeats = repeats
         self.warmup = warmup
         self.platform = platform
+        # corpus-distribution axis label (baseline | mixed | progressive).
+        # "progressive" — every non-rare image is SOF2 — additionally
+        # gates run_path on Capabilities.progressive: a baseline-only
+        # decoder would deliver nothing, so the cell resolves to one
+        # schema-v2 skip record instead of a 0-throughput measurement.
+        # A "mixed" corpus still runs everywhere: baseline-only paths
+        # deliver the baseline majority and record per-image skips.
+        self.corpus_kind = corpus_kind
 
     def run_path(self, path, entropy_workers: int = 0) -> RunRecord:
         spec = as_spec(path)
+        verdict = eligible(spec.caps, ExecContext.INLINE,
+                           requires_progressive=(
+                               self.corpus_kind == "progressive"))
+        if not verdict:
+            # the schema-v2 skip envelope (same shape as LoaderProtocol's)
+            return RunRecord(
+                platform=self.platform, decoder=spec.name,
+                protocol="single_thread", workers=0, mode="",
+                throughput_mean=0.0, throughput_std=0.0, samples=[],
+                num_images=len(self.corpus.files),
+                meta={"status": "skipped", "eligible": False,
+                      "reason": verdict.reason,
+                      "engine": spec.caps.engine,
+                      "strict": spec.caps.strict,
+                      "corpus": self.corpus_kind})
         files = self.corpus.files
         skips: Set[int] = set()
 

@@ -446,7 +446,14 @@ def decode_coefficients(spec: DecodeSpec,
     with serial fallbacks also counted in ``entropy_stats()`` and marked
     by a ``jpeg.entropy.fallback`` instant. Serial and parallel decode
     run the same ``decode_segment`` pure function, so their coefficient
-    output is byte-identical by construction."""
+    output is byte-identical by construction.
+
+    SOF2 streams dispatch to the progressive decoder (multi-scan
+    coefficient accumulation, same output layout) — every decode path
+    inherits progressive support through this single entry point."""
+    if spec.progressive:
+        from repro.jpeg import progressive as _progressive
+        return _progressive.decode_coefficients_progressive(spec, workers)
     requested = int(workers) if workers else current_entropy_workers()
     components = component_layout(spec)
     tables_key = hashable_tables(spec.htables)

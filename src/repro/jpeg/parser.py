@@ -10,13 +10,38 @@ import numpy as np
 from repro.jpeg import tables as T
 
 
-class UnsupportedJpeg(Exception):
-    """Raised by strict decode paths on rare JPEG modes (the paper's
-    skip-accounting case)."""
-
-
 class CorruptJpeg(Exception):
     pass
+
+
+class UnsupportedJpeg(CorruptJpeg):
+    """Raised on JPEG modes the decode surface does not implement —
+    strict-policy refusals (the paper's skip-accounting case) and frame
+    types outside the baseline/progressive DCT families. A subclass of
+    ``CorruptJpeg`` so a catch-all on the decode-domain error type also
+    covers refusals; consumers that distinguish the two (skip vs error)
+    catch ``UnsupportedJpeg`` first."""
+
+
+# Frame-type classification (T.81 table B.1). SOF0/1/2 decode here; every
+# other SOFn — lossless, differential, arithmetic-coded — is recognized by
+# name and refused with a typed UnsupportedJpeg instead of the old silent
+# misparse (the generic segment-skip path dropped the frame header and
+# decode failed later with an unrelated "no frame/scan" error).
+SUPPORTED_SOF = (0xC0, 0xC1, 0xC2)
+UNSUPPORTED_SOF = {
+    0xC3: "SOF3 (lossless sequential)",
+    0xC5: "SOF5 (differential sequential)",
+    0xC6: "SOF6 (differential progressive)",
+    0xC7: "SOF7 (differential lossless)",
+    0xC9: "SOF9 (arithmetic sequential)",
+    0xCA: "SOF10 (arithmetic progressive)",
+    0xCB: "SOF11 (arithmetic lossless)",
+    0xCD: "SOF13 (differential arithmetic sequential)",
+    0xCE: "SOF14 (differential arithmetic progressive)",
+    0xCF: "SOF15 (differential arithmetic lossless)",
+    0xCC: "DAC (arithmetic coding conditioning)",
+}
 
 
 @dataclasses.dataclass
@@ -27,6 +52,26 @@ class Component:
     tq: int              # quant table id
     td: int = 0          # DC huffman table id
     ta: int = 0          # AC huffman table id
+
+
+@dataclasses.dataclass
+class Scan:
+    """One SOS header plus its entropy-coded data.
+
+    Progressive decode needs per-scan state the frame header cannot carry:
+    spectral band (Ss/Se), successive-approximation bit positions (Ah/Al),
+    the Huffman tables *as defined at scan time* (optimized progressive
+    encoders redefine DHT between scans), and the restart interval in
+    force when the scan started (DRI may appear between scans).
+    """
+    comps: List[Tuple[int, int, int]]   # (cid, td, ta) in scan order
+    ss: int                              # spectral selection start
+    se: int                              # spectral selection end
+    ah: int                              # successive approximation high
+    al: int                              # successive approximation low
+    data: bytes                          # entropy-coded bytes (stuffed)
+    htables: Dict[Tuple[int, int], Tuple[list, list]]
+    restart_interval: int = 0
 
 
 @dataclasses.dataclass
@@ -41,6 +86,7 @@ class DecodeSpec:
     adobe_transform: Optional[int] = None
     precision: int = 8
     restart_interval: int = 0                   # DRI: MCUs per restart (0=off)
+    scans: List[Scan] = dataclasses.field(default_factory=list)
 
     @property
     def mcu_h(self) -> int:
@@ -76,6 +122,7 @@ def parse(data: bytes, headers_only: bool = False) -> DecodeSpec:
     precision = 8
     restart_interval = 0
     scan = b""
+    scans: List[Scan] = []
     n = len(data)
     while i < n:
         if data[i] != 0xFF:
@@ -112,7 +159,7 @@ def parse(data: bytes, headers_only: bool = False) -> DecodeSpec:
                 nat = np.zeros(64, np.int32)
                 nat[T.ZIGZAG] = zz
                 qtables[tq] = nat.reshape(8, 8)
-        elif marker in (0xC0, 0xC1, 0xC2):     # SOF0/1/2
+        elif marker in SUPPORTED_SOF:          # SOF0/1/2
             progressive = marker == 0xC2
             try:
                 precision = payload[0]
@@ -124,6 +171,9 @@ def parse(data: bytes, headers_only: bool = False) -> DecodeSpec:
                     comps.append(Component(cid, hv >> 4, hv & 0xF, tq))
             except (struct.error, IndexError, ValueError) as e:
                 raise CorruptJpeg(f"truncated SOF payload: {e}") from None
+        elif marker in UNSUPPORTED_SOF:
+            raise UnsupportedJpeg(
+                f"unsupported frame type {UNSUPPORTED_SOF[marker]}")
         elif marker == 0xC4:     # DHT
             j = 0
             while j < len(payload):
@@ -148,14 +198,21 @@ def parse(data: bytes, headers_only: bool = False) -> DecodeSpec:
         elif marker == 0xDA:     # SOS
             try:
                 ns = payload[0]
+                scan_comps: List[Tuple[int, int, int]] = []
                 for k in range(ns):
                     cid, tt = payload[1 + 2 * k:3 + 2 * k]
+                    scan_comps.append((cid, tt >> 4, tt & 0xF))
                     for c in comps:
                         if c.cid == cid:
                             c.td, c.ta = tt >> 4, tt & 0xF
+                ss, se, ahal = payload[1 + 2 * ns:4 + 2 * ns]
             except (IndexError, ValueError) as e:
                 raise CorruptJpeg(f"truncated SOS payload: {e}") from None
             if headers_only:
+                # record the scan header (empty data) so headers-only
+                # callers still see the first scan's band/approximation
+                scans.append(Scan(scan_comps, ss, se, ahal >> 4, ahal & 0xF,
+                                  b"", dict(htables), restart_interval))
                 break
             # entropy data runs until next non-RST marker
             j = i
@@ -165,12 +222,18 @@ def parse(data: bytes, headers_only: bool = False) -> DecodeSpec:
                     break
                 j += 1
             scan = data[i:j]
+            # snapshot the Huffman-table environment: progressive encoders
+            # may redefine DHT between scans, so each scan keeps the tables
+            # (and DRI) in force when it started
+            scans.append(Scan(scan_comps, ss, se, ahal >> 4, ahal & 0xF,
+                              scan, dict(htables), restart_interval))
             i = j
     if not comps or (not scan and not headers_only):
         raise CorruptJpeg("no frame/scan")
     return DecodeSpec(H, W, comps, qtables, htables, scan,
                       progressive=progressive, adobe_transform=adobe,
-                      precision=precision, restart_interval=restart_interval)
+                      precision=precision, restart_interval=restart_interval,
+                      scans=scans)
 
 
 def check_strict(spec: DecodeSpec) -> None:

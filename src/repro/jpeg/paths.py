@@ -284,13 +284,16 @@ def _pallas_decode_batch(datas: List[bytes], strict: bool = False) -> List:
 def _register(name, fn, *, engine="numpy", strict=False, batch_fn=None,
               description=""):
     # every built-in path funnels entropy decode through huffman, so all
-    # of them honor the interval-parallel entropy_workers knob
+    # of them honor the interval-parallel entropy_workers knob AND
+    # inherit progressive (SOF2) decode — except the strict paths, whose
+    # policy refuses progressive before entropy decode (check_strict)
     register_decoder(
         name, fn,
         caps=Capabilities(engine=engine, strict=strict,
                           fork_safe=(engine == "numpy"),
                           batchable=batch_fn is not None,
-                          parallel_entropy=True),
+                          parallel_entropy=True,
+                          progressive=not strict),
         batch_fn=batch_fn, description=description)
 
 
@@ -358,13 +361,15 @@ class DecodePath:
     description: str = ""
     batch_fn: Optional[Callable[[List[bytes]], List]] = None
     parallel_entropy: bool = False    # ad-hoc shims stay serial-only
+    progressive: bool = False         # ad-hoc shims are baseline-only
 
     @property
     def caps(self) -> Capabilities:
         return Capabilities(engine=self.engine, strict=self.strict,
                             fork_safe=self.process_eligible,
                             batchable=self.batch_fn is not None,
-                            parallel_entropy=self.parallel_entropy)
+                            parallel_entropy=self.parallel_entropy,
+                            progressive=self.progressive)
 
     def decode(self, data: bytes) -> np.ndarray:
         return self.fn(data)
@@ -387,7 +392,8 @@ def _path_of(spec: DecoderSpec) -> DecodePath:
                       process_eligible=spec.caps.fork_safe,
                       engine=spec.caps.engine,
                       description=spec.description, batch_fn=spec.batch_fn,
-                      parallel_entropy=spec.caps.parallel_entropy)
+                      parallel_entropy=spec.caps.parallel_entropy,
+                      progressive=spec.caps.progressive)
     _PATH_CACHE[spec.name] = (spec, path)
     return path
 

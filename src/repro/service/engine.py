@@ -39,11 +39,12 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.codecs import DecodeOutcome, Decoder, ExecContext, open_decoder
+from repro.codecs import (DecodeOutcome, Decoder, ExecContext, open_decoder,
+                          probe_outcome)
 from repro.jpeg.parser import UnsupportedJpeg
 from repro.obs import trace
 from repro.service.admission import AdmissionController, ServiceOverloaded
-from repro.service.batcher import Batch, MicroBatcher, bucket_key
+from repro.service.batcher import Batch, MicroBatcher
 from repro.service.cache import DecodeCache, content_key
 from repro.service.metrics import ServiceMetrics
 from repro.service.router import BanditRouter
@@ -237,11 +238,21 @@ class DecodeService:
                 return
             if item is not None:
                 try:
-                    key = bucket_key(item.data, gran)
+                    pr = probe_outcome(item.data, gran)
                 except Exception as e:       # CorruptJpeg, truncated headers
                     self._fail(item, e)
                     continue
-                full = self.batcher.add(key, item, time.monotonic())
+                if pr.skip:
+                    # refusable input (unsupported frame family): hand it
+                    # to a worker as a single-item keyless batch instead
+                    # of failing here — _serve_batch's skip machinery
+                    # records the refusal against the picked arm and
+                    # retries the router's fallback, so probe refusals
+                    # share one accounting path with decode-time refusals
+                    self._batchq.put(Batch(key=None, items=[item],
+                                           oldest_t=time.monotonic()))
+                    continue
+                full = self.batcher.add(pr.key, item, time.monotonic())
                 if full is not None:
                     self._batchq.put(full)
             for b in self.batcher.take_due(time.monotonic()):

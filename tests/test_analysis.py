@@ -273,6 +273,54 @@ def test_jit_in_loop_ignores_function_defined_in_loop_scope():
     assert found == []
 
 
+def test_jit_flags_progressive_scan_loop_in_traced_body():
+    # the progressive decoder's per-scan accumulation is host-side by
+    # design (DESIGN.md §11): sequential scans branch on decoded
+    # coefficient state, which cannot trace. A jit body shaped like the
+    # scan loop must be flagged.
+    found = run("""
+        import jax
+        @jax.jit
+        def entropy_decode(coefs, scans):
+            for sc in scans:
+                if coefs > 0:
+                    coefs = coefs + sc
+            return coefs
+        """, "jit-traced-branch")
+    assert rule_ids(found) == ["jit-traced-branch"]
+
+
+def test_jit_flags_zigzag_scatter_in_traced_body():
+    # the accumulators' natural-order scatter is host numpy; inside a
+    # jit body the same shape is silent per-trace recomputation
+    found = run("""
+        import jax, numpy as np
+        @jax.jit
+        def accumulate(acc, blk):
+            nat = np.zeros((64,))
+            nat[ZIGZAG] = blk
+            return acc + nat
+        """, "jit-host-numpy")
+    assert rule_ids(found) == ["jit-host-numpy"]
+
+
+def test_jit_allows_host_side_scan_loop_feeding_jitted_idct():
+    # the near-miss that must stay clean: the decoder's actual shape —
+    # a host loop over python Scan records, jitted work only downstream
+    found = run("""
+        import jax
+        idct = jax.jit(lambda blocks: blocks)
+        def decode(spec, acc):
+            for sc in spec.scans:
+                if sc.ah == 0:
+                    acc = first_scan(acc, sc)
+                else:
+                    acc = refine_scan(acc, sc)
+            return idct(acc)
+        """, "jit-traced-branch")
+    assert found == []
+
+
 # ------------------------------------------------ exception discipline
 def test_except_swallow_flagged():
     found = run("""

@@ -104,6 +104,15 @@ def test_registry_covers_matrix():
     serial_names = {s.name for s in scenarios if s.entropy == "serial"}
     for p in par:
         assert f"single/{p}" in serial_names
+    # the corpus axis: every path gets a mixed and a progressive cell,
+    # and the suffixless cells keep corpus="baseline" (compare keys
+    # stable across the axis's introduction)
+    all_names = {s.name for s in scenarios}
+    for p in singles:
+        assert f"single/{p}/corpus-mixed" in all_names
+        assert f"single/{p}/corpus-progressive" in all_names
+    assert all(s.corpus == "baseline" for s in scenarios
+               if "/corpus-" not in s.name)
 
 
 def test_select_scenarios_prefix_and_errors():
@@ -112,11 +121,14 @@ def test_select_scenarios_prefix_and_errors():
     # (w0 + {2,4,8} x {thread,process}) x {memory,shard}
     assert len(picked) == 14
     # 'single/jnp-fused' is both an exact name and a '/'-boundary prefix
-    # of its entropy-axis twin
+    # of its entropy-axis and corpus-axis twins
     exact = select_scenarios(["single/jnp-fused"])
-    assert [s.name for s in exact] == ["single/jnp-fused",
-                                       "single/jnp-fused/entropy-par"]
+    assert [s.name for s in exact] == [
+        "single/jnp-fused", "single/jnp-fused/entropy-par",
+        "single/jnp-fused/corpus-mixed",
+        "single/jnp-fused/corpus-progressive"]
     assert {s.entropy for s in exact} == {"serial", "parallel"}
+    assert {s.corpus for s in exact} == {"baseline", "mixed", "progressive"}
     with pytest.raises(BenchSelectionError, match="single/numpy-ref"):
         select_scenarios(["single/nvjpeg"])
 
@@ -177,6 +189,25 @@ def test_smoke_sweep_measures_shard_cell_and_memory_twin(smoke_sweep):
     assert shard.meta["corpus_fingerprint"] == want
     # same delivery on both sides of the source axis
     assert shard.meta["delivered"] == mem.meta["delivered"]
+
+
+def test_smoke_sweep_corpus_axis_cells(smoke_sweep):
+    """The corpus-axis acceptance pair in the smoke artifact: the mixed
+    cell on a progressive-capable path is measured, and the
+    all-progressive cell on a baseline-only strict path is a schema-v2
+    capability skip whose reason names the missing capability."""
+    by_name = {r.scenario: r for r in smoke_sweep.records}
+    ok = by_name["single/jnp-fused/corpus-mixed"]
+    assert ok.status == "ok" and ok.meta["corpus"] == "mixed"
+    assert ok.throughput_mean > 0
+    skip = by_name["single/strict-fast/corpus-progressive"]
+    assert skip.status == "skipped" and skip.samples == []
+    assert skip.meta["eligible"] is False
+    assert "Capabilities.progressive" in skip.meta["reason"]
+    assert skip.meta["corpus"] == "progressive"
+    # cells outside the smoke budget are profile skips, not errors
+    other = by_name["single/numpy-fast/corpus-mixed"]
+    assert other.status == "skipped" and "profile" in other.meta["reason"]
 
 
 def test_smoke_sweep_artifacts_validate(smoke_sweep):

@@ -316,6 +316,54 @@ def test_skip_ledger_count_thread_safe(corpus):
     assert len(led.indices()) == 800
 
 
+@pytest.fixture(scope="module")
+def mixed_corpus():
+    """Half-progressive corpus (plus the rare YCCK image): the skip
+    surface a baseline-only decode path sees in a mixed deployment."""
+    from repro.jpeg.corpus import build_corpus
+    c = build_corpus(12, seed=7, progressive=0.5)
+    assert c.progressive_indices          # the draw actually fired
+    return c
+
+
+def test_mixed_corpus_strict_path_skips_to_ledger(mixed_corpus):
+    """A path without Capabilities.progressive skips every progressive
+    image (and the rare YCCK one); throughput counts only delivered
+    items and every skip is recorded, none double-counted."""
+    c = mixed_corpus
+    expect = sorted(set(c.progressive_indices) | {c.rare_index})
+    dl = mkloader(c, path=STRICT)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(c.files) - len(expect)
+    assert dl.ledger.indices() == expect
+
+
+def test_mixed_corpus_progressive_path_delivers_everything(mixed_corpus):
+    dl = mkloader(mixed_corpus, num_workers=2)
+    total = sum(b["image"].shape[0] for b in dl)
+    assert total == len(mixed_corpus.files)
+    assert dl.ledger.indices() == []
+
+
+def test_mixed_corpus_resume_does_not_replay_skips(mixed_corpus):
+    """Mid-epoch checkpoint/restore on the mixed corpus: the cursor has
+    advanced past consumed skips, so the resumed epoch delivers exactly
+    the remaining non-skipped items — no replays, no drops."""
+    c = mixed_corpus
+    skips = set(c.progressive_indices) | {c.rare_index}
+    dl = mkloader(c, path=STRICT, batch_size=3)
+    it = iter(dl)
+    seen = list(next(it)["label"])
+    state = dl.state()
+    assert state["cursor"] > len(seen)    # skips advanced the cursor too
+    dl2 = mkloader(c, path=STRICT, batch_size=3)
+    dl2.restore(state)
+    rest = [lab for b in dl2 for lab in b["label"]]
+    assert len(seen) + len(rest) == len(c.files) - len(skips)
+    expect = [c.labels[i] for i in range(len(c.files)) if i not in skips]
+    np.testing.assert_array_equal(np.concatenate([seen, rest]), expect)
+
+
 def test_center_fit_properties():
     img = np.arange(5 * 7 * 3, dtype=np.uint8).reshape(5, 7, 3)
     out = center_fit(img, 8, 4)
