@@ -16,6 +16,12 @@ Subcommands:
            sweep instead of nine ad-hoc measurement loops.
   compare  diff two record sets with noise-aware gates; exits nonzero on
            a hard (>2x by default) regression unless --warn-only.
+           ``--attribute`` names the pipeline stage behind each
+           regression from traced ``meta.stage_s`` rollups, preferring
+           a same-host baseline from ``--history``.
+  history  append a record set to (or inspect) an append-only JSONL
+           history store keyed by host fingerprint — the nightly job's
+           cross-run memory that stage attribution reads.
   list     print every scenario name and whether each profile runs it.
 
 Arguments are parsed strictly: unknown flags error out instead of being
@@ -24,7 +30,7 @@ silently swallowed (the old ``parse_known_args`` behavior hid typos).
 import argparse
 import sys
 
-SUBCOMMANDS = ("sweep", "tables", "compare", "list", "ingest")
+SUBCOMMANDS = ("sweep", "tables", "compare", "list", "ingest", "history")
 TABLES = ("table1", "table2", "table3", "table4", "table5",
           "fig3", "kernels", "roofline", "service")
 
@@ -98,6 +104,26 @@ def build_parser() -> argparse.ArgumentParser:
                     help="also write a ranked regressions/improvements "
                          "markdown table (CI appends it to "
                          "$GITHUB_STEP_SUMMARY)")
+    cp.add_argument("--attribute", action="store_true",
+                    help="name the stage behind each fail/warn from "
+                         "traced meta.stage_s (needs sweep --trace "
+                         "records on at least one side)")
+    cp.add_argument("--history", default=None, metavar="PATH",
+                    help="HistoryStore JSONL: prefer its newest "
+                         "same-host traced run as the attribution "
+                         "baseline")
+
+    hi = sub.add_parser("history",
+                        help="append to / inspect the run-history store")
+    hi.add_argument("action", choices=("append", "show"))
+    hi.add_argument("records", nargs="?", default=None,
+                    help="record-set JSON to append (append only)")
+    hi.add_argument("--store", required=True, metavar="PATH",
+                    help="history JSONL path (created on first append)")
+    hi.add_argument("--profile", default="",
+                    help="profile tag stored with the appended run")
+    hi.add_argument("--last", type=int, default=10,
+                    help="show: how many newest runs to print")
 
     sub.add_parser("list", help="print the scenario registry")
     return ap
@@ -192,16 +218,28 @@ def cmd_tables(args) -> int:
 
 
 def cmd_compare(args) -> int:
-    from repro.bench import compare_paths
-    from repro.bench.compare import summary_markdown
+    from repro.bench.compare import (attribute_result, compare_records,
+                                     summary_markdown)
+    from repro.bench.history import HistoryStore
     from repro.core.report import compare_report
-    from repro.core.schema import SchemaError
+    from repro.core.schema import RunRecord, SchemaError, load_payload
     try:
-        res = compare_paths(args.baseline, args.candidate,
-                            fail_ratio=args.fail_ratio)
+        old_p = load_payload(args.baseline)
+        new_p = load_payload(args.candidate)
+        old = [RunRecord.from_json(r) for r in old_p["records"]]
+        new = [RunRecord.from_json(r) for r in new_p["records"]]
+        res = compare_records(old, new, fail_ratio=args.fail_ratio,
+                              old_host=old_p.get("host"),
+                              new_host=new_p.get("host"))
     except (OSError, SchemaError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
+    if args.attribute:
+        history = HistoryStore(args.history) if args.history else None
+        attribute_result(res, old, new, history=history)
+        for e in res.entries:
+            if e.attribution:
+                print(f"# attribution {e.scenario}: {e.attribution}")
     if args.summary_md:
         with open(args.summary_md, "w") as f:
             f.write(summary_markdown(res))
@@ -216,6 +254,46 @@ def cmd_compare(args) -> int:
     if res.n_fail and args.warn_only:
         print(f"warn-only: {res.n_fail} failure(s) demoted to warnings")
     return code
+
+
+def cmd_history(args) -> int:
+    import time
+
+    from repro.bench.history import HistoryStore
+    from repro.core.schema import RunRecord, SchemaError, load_payload
+    store = HistoryStore(args.store)
+    if args.action == "append":
+        if not args.records:
+            print("error: history append needs a record-set JSON path",
+                  file=sys.stderr)
+            return 2
+        try:
+            payload = load_payload(args.records)
+            records = [RunRecord.from_json(r)
+                       for r in payload["records"]]
+            run = store.append(records, host=payload.get("host"),
+                               profile=args.profile)
+        except (OSError, SchemaError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        traced = sum(1 for r in records if r.meta.get("stage_s"))
+        print(f"appended run {run.run_id} (host {run.fingerprint}, "
+              f"{len(records)} records, {traced} stage-traced) "
+              f"to {store.path}")
+        return 0
+    runs, dropped = store.scan()
+    print(f"{len(runs)} run(s) in {store.path}")
+    if dropped:
+        print(f"# {dropped} unreadable line(s) skipped (torn write or "
+              "schema drift)")
+    for run in runs[-max(0, args.last):]:
+        traced = sum(1 for r in run.records if r.meta.get("stage_s"))
+        when = time.strftime("%Y-%m-%d %H:%M:%S",
+                             time.gmtime(run.t))
+        print(f"{run.run_id}  {when}Z  host={run.fingerprint}  "
+              f"profile={run.profile or '-'}  records={len(run.records)}"
+              f"  stage-traced={traced}")
+    return 0
 
 
 def cmd_list(_args) -> int:
@@ -242,7 +320,7 @@ def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     handler = {"sweep": cmd_sweep, "tables": cmd_tables,
                "compare": cmd_compare, "list": cmd_list,
-               "ingest": cmd_ingest}[args.cmd]
+               "ingest": cmd_ingest, "history": cmd_history}[args.cmd]
     return handler(args)
 
 

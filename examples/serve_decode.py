@@ -9,10 +9,22 @@ and the robust tier computed from in-situ measurements (the paper's
 Table-4 logic applied to service telemetry instead of offline benchmarks).
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --workers 2
+
+With ``--metrics-port`` the service also serves its live telemetry over
+loopback HTTP while the demo runs (and the demo scrapes it once before
+shutdown so you see the real response bodies):
+
+  PYTHONPATH=src python examples/serve_decode.py --metrics-port 9100
+  curl http://127.0.0.1:9100/metrics   # Prometheus text exposition
+  curl http://127.0.0.1:9100/healthz   # liveness JSON
+  curl http://127.0.0.1:9100/slo       # SLO burn-rate JSON
+
+Use ``--metrics-port 0`` to bind an ephemeral port (printed at start).
 """
 import argparse
 import json
 import threading
+import urllib.request
 
 from repro.codecs import list_decoders
 from repro.jpeg.corpus import build_corpus, zipf_indices
@@ -27,12 +39,16 @@ def main():
                     help="requests per client")
     ap.add_argument("--corpus", type=int, default=24)
     ap.add_argument("--policy", default="ucb", choices=("ucb", "epsilon"))
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics, /healthz, /slo on this "
+                         "loopback port while running (0 = ephemeral)")
     args = ap.parse_args()
 
     corpus = build_corpus(args.corpus, seed=11)
 
     cfg = ServiceConfig(num_workers=args.workers, max_batch=8,
-                        max_wait_ms=2.0, policy=args.policy)
+                        max_wait_ms=2.0, policy=args.policy,
+                        metrics_port=args.metrics_port)
     # every registered decoder is an arm; strict paths fall back on the
     # rare YCCK image instead of failing the request
     svc = DecodeService(cfg, paths=list_decoders())
@@ -49,6 +65,8 @@ def main():
         print(f"  client {cid}: served={served} shed={shed}")
 
     with svc:
+        if svc.telemetry is not None:
+            print(f"telemetry: {svc.telemetry.url}/metrics  /healthz  /slo")
         threads = [threading.Thread(target=client, args=(f"c{k}", 100 + k))
                    for k in range(args.clients)]
         print(f"serving {args.clients} clients x {args.requests} requests "
@@ -59,6 +77,15 @@ def main():
             t.join()
         stats = svc.stats()
         tier = svc.router.tier()
+        if svc.telemetry is not None:
+            # one live scrape before shutdown: what an operator's
+            # Prometheus job would see
+            body = urllib.request.urlopen(
+                svc.telemetry.url + "/metrics", timeout=5).read().decode()
+            served_lines = [ln for ln in body.splitlines()
+                            if ln.startswith("service_") and "{" not in ln]
+            print("\n-- /metrics (unlabeled service series) --")
+            print("\n".join(served_lines))
 
     print("\n-- service stats --")
     print(json.dumps(stats, indent=1, default=str))

@@ -6,18 +6,20 @@ JSON plus derived decision reports, and a noise-aware record-set compare
 gate for CI. `benchmarks/*.py` are thin views over this package.
 """
 from repro.bench.compare import (CompareEntry, CompareResult,
-                                 compare_paths, compare_records,
-                                 summary_markdown)
+                                 attribute_result, compare_paths,
+                                 compare_records, summary_markdown)
 from repro.bench.harness import (DEFAULT_OUT, SweepResult, render_report,
                                  run_sweep)
+from repro.bench.history import HistoryRun, HistoryStore, attribute_stages
 from repro.bench.registry import (PROFILES, BenchSelectionError, Profile,
                                   Scenario, build_registry, scenario_names,
                                   select_scenarios)
 
 __all__ = [
-    "CompareEntry", "CompareResult", "compare_paths", "compare_records",
-    "summary_markdown",
+    "CompareEntry", "CompareResult", "attribute_result", "compare_paths",
+    "compare_records", "summary_markdown",
     "DEFAULT_OUT", "SweepResult", "render_report", "run_sweep",
+    "HistoryRun", "HistoryStore", "attribute_stages",
     "PROFILES", "BenchSelectionError", "Profile", "Scenario",
     "build_registry", "scenario_names", "select_scenarios",
 ]

@@ -40,6 +40,7 @@ class CompareEntry:
     ratio: float = 0.0        # new/old (>1 means faster)
     threshold: float = 0.0    # relative warn gate applied
     detail: str = ""
+    attribution: str = ""     # stage-level blame, e.g. "entropy 1.8x"
 
 
 @dataclasses.dataclass
@@ -140,6 +141,7 @@ def summary_markdown(res: CompareResult, *, max_rows: int = 20) -> str:
     worst-first, then improvements best-first, so the checks page answers
     "what moved?" without opening the uploaded JSON."""
     lines = ["## Bench compare", "", res.summary_line(), ""]
+    attributed = any(e.attribution for e in res.entries)
 
     def table(title: str, entries: List[CompareEntry]) -> None:
         if not entries:
@@ -147,15 +149,20 @@ def summary_markdown(res: CompareResult, *, max_rows: int = 20) -> str:
         shown = entries[:max_rows]
         lines.append(f"### {title} ({len(entries)})")
         lines.append("")
+        stage_h = " stage |" if attributed else ""
         lines.append("| scenario | baseline img/s | candidate img/s "
-                     "| ratio | gate |")
-        lines.append("|---|---:|---:|---:|---:|")
+                     f"| ratio | gate |{stage_h}")
+        lines.append("|---|---:|---:|---:|---:|" + ("---|" if attributed
+                                                    else ""))
         for e in shown:
+            stage_c = f" {e.attribution} |" if attributed else ""
             lines.append(
                 f"| `{e.scenario}` | {e.old_mean:.1f} | {e.new_mean:.1f} "
-                f"| {e.ratio:.3f}x | ±{e.threshold:.1%} |")
+                f"| {e.ratio:.3f}x | ±{e.threshold:.1%} |{stage_c}")
         if len(entries) > max_rows:
-            lines.append(f"| … {len(entries) - max_rows} more | | | | |")
+            pad = " |" if attributed else ""
+            lines.append(f"| … {len(entries) - max_rows} more rows "
+                         f"omitted | | | | |{pad}")
         lines.append("")
 
     table("Failures", sorted(res.by_verdict("fail"),
@@ -188,3 +195,45 @@ def compare_paths(old_path: str, new_path: str, *,
         [RunRecord.from_json(r) for r in new["records"]],
         fail_ratio=fail_ratio, z=z,
         old_host=old.get("host"), new_host=new.get("host"))
+
+
+def attribute_result(res: CompareResult, old: Sequence[RunRecord],
+                     new: Sequence[RunRecord], *, history=None) -> int:
+    """Stage-attribute every fail/warn entry in ``res`` in place.
+
+    The candidate record's ``meta.stage_s`` is compared against the
+    newest same-fingerprint run in ``history`` (a
+    :class:`~repro.bench.history.HistoryStore`) that traced the same
+    scenario, falling back to the compare baseline itself when the
+    store has none. Entries that cannot be attributed get an explicit
+    "unattributed: …" note — the absence of stage data is a finding,
+    not a blank. Returns the number of entries that got a stage name.
+    """
+    from repro.bench.history import _fp_of, attribute_stages
+    oi, ni = _index(old), _index(new)
+    fingerprint = _fp_of(res.new_host)
+    named = 0
+    for e in res.entries:
+        if e.verdict not in ("fail", "warn"):
+            continue
+        new_rec = ni.get(e.scenario)
+        old_rec = None
+        if history is not None:
+            hit = history.stage_baseline(e.scenario, fingerprint)
+            if hit is not None:
+                old_rec = hit[1]
+        if old_rec is None:
+            old_rec = oi.get(e.scenario)
+        if (new_rec is None or old_rec is None
+                or not new_rec.meta.get("stage_s")
+                or not old_rec.meta.get("stage_s")):
+            e.attribution = ("unattributed: no stage_s rollup "
+                             "(run sweep --trace)")
+            continue
+        note = attribute_stages(old_rec, new_rec)
+        if note:
+            e.attribution = note
+            named += 1
+        else:
+            e.attribution = "unattributed: no single stage moved enough"
+    return named

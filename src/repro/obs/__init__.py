@@ -6,15 +6,20 @@ counters/gauges/histograms in a pull-based registry with Prometheus-style
 text exposition. See DESIGN.md §8 for the model and the instrumentation
 map.
 """
+from repro.obs.http import TelemetryServer  # noqa: F401
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                MetricsRegistry)
-from repro.obs.trace import (NullTracer, Tracer, get_tracer,  # noqa: F401
-                             init_worker, merge_shards, set_tracer, span,
-                             stage_seconds, use_tracer, write_chrome_trace)
+from repro.obs.slo import (DecisionLog, SLOObjective,  # noqa: F401
+                           SLOTracker)
+from repro.obs.trace import (NullTracer, SamplingTracer,  # noqa: F401
+                             Tracer, get_tracer, init_worker, merge_shards,
+                             set_tracer, span, stage_seconds, use_tracer,
+                             write_chrome_trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "NullTracer", "Tracer", "get_tracer", "set_tracer", "use_tracer",
-    "span", "init_worker", "merge_shards", "stage_seconds",
+    "SLOObjective", "SLOTracker", "DecisionLog", "TelemetryServer",
+    "NullTracer", "Tracer", "SamplingTracer", "get_tracer", "set_tracer",
+    "use_tracer", "span", "init_worker", "merge_shards", "stage_seconds",
     "write_chrome_trace",
 ]

@@ -133,13 +133,29 @@ class Gauge(_Instrument):
                 for key, val in items] or [f"{self.name} 0"]
 
 
+class _HistSeries:
+    """State of one histogram label set. The owning Histogram's lock
+    guards every access; this is a plain record, not a lockable."""
+
+    __slots__ = ("counts", "sum", "count", "window")
+
+    def __init__(self, n_buckets: int, window: int):
+        self.counts = [0] * (n_buckets + 1)            # +1: +Inf overflow
+        self.sum = 0.0
+        self.count = 0
+        self.window: deque = deque(maxlen=window)
+
+
 class Histogram(_Instrument):
-    """Fixed-boundary bucket histogram + bounded exact-sample window.
+    """Fixed-boundary bucket histogram + bounded exact-sample window,
+    one series per label set (same label model as Counter/Gauge).
 
     Buckets carry the Prometheus cumulative-``le`` exposition; the
-    sample window (most recent ``window`` observations) backs exact
-    nearest-rank ``quantile()`` readouts through the one shared
-    ``core.stats.percentile`` helper.
+    sample window (most recent ``window`` observations per series) backs
+    exact nearest-rank ``quantile()`` readouts through the one shared
+    ``core.stats.percentile`` helper. Reads without labels aggregate
+    across every series, so unlabeled callers see the historical
+    whole-instrument view; reads with labels select that series.
     """
 
     kind = "histogram"
@@ -151,65 +167,101 @@ class Histogram(_Instrument):
         if not buckets or list(buckets) != sorted(set(buckets)):
             raise ValueError("buckets must be sorted, unique, non-empty")
         self.buckets: Tuple[float, ...] = tuple(float(b) for b in buckets)
-        self._counts = [0] * (len(self.buckets) + 1)   # +1: +Inf overflow
-        self._sum = 0.0
-        self._count = 0
-        self._window: deque = deque(maxlen=window)
+        self._window_size = int(window)
+        self._series: Dict[_LabelKey, _HistSeries] = {}
 
-    def observe(self, value: float) -> None:
+    def observe(self, value: float, **labels) -> None:
         v = float(value)
         idx = bisect_left(self.buckets, v)
+        key = _label_key(labels)
         with self._lock:
-            self._counts[idx] += 1
-            self._sum += v
-            self._count += 1
-            self._window.append(v)
+            s = self._series.get(key)
+            if s is None:
+                s = _HistSeries(len(self.buckets), self._window_size)
+                self._series[key] = s
+            s.counts[idx] += 1
+            s.sum += v
+            s.count += 1
+            s.window.append(v)
+
+    def _selected(self, labels: Dict[str, object]) -> List[_HistSeries]:
+        """Series matching the read: all of them when unlabeled (the
+        aggregate view), else exactly the named one. Caller holds lock."""
+        if not labels:
+            return list(self._series.values())
+        s = self._series.get(_label_key(labels))
+        return [s] if s is not None else []
 
     @property
     def count(self) -> int:
         with self._lock:
-            return self._count
+            return sum(s.count for s in self._series.values())
 
     @property
     def sum(self) -> float:
         with self._lock:
-            return self._sum
+            return sum(s.sum for s in self._series.values())
 
-    def quantile(self, p: float) -> float:
-        """Exact nearest-rank quantile over the recent sample window."""
+    def quantile(self, p: float, **labels) -> float:
+        """Exact nearest-rank quantile over the recent sample window
+        (merged across series when unlabeled)."""
         # deferred import: obs must stay a leaf package (jpeg and store
         # import it for spans), and repro.core's package init pulls the
         # loader/store stack — importing it here at module level closes
         # an import cycle through store.format
         from repro.core.stats import percentile
         with self._lock:
-            samples = list(self._window)
+            samples = [v for s in self._selected(labels) for v in s.window]
         return percentile(samples, p)
 
-    def bucket_counts(self) -> Dict[str, int]:
+    def bucket_counts(self, **labels) -> Dict[str, int]:
         """Cumulative counts keyed by upper bound (Prometheus ``le``)."""
         with self._lock:
-            counts = list(self._counts)
+            totals = [0] * (len(self.buckets) + 1)
+            for s in self._selected(labels):
+                for i, c in enumerate(s.counts):
+                    totals[i] += c
         out, running = {}, 0
-        for b, c in zip(self.buckets, counts):
+        for b, c in zip(self.buckets, totals):
             running += c
             out[f"{b:g}"] = running
-        out["+Inf"] = running + counts[-1]
+        out["+Inf"] = running + totals[-1]
         return out
+
+    def labelsets(self) -> List[Dict[str, str]]:
+        with self._lock:
+            return [dict(k) for k in sorted(self._series)]
 
     def snapshot(self):
         with self._lock:
-            count, total = self._count, self._sum
+            count = sum(s.count for s in self._series.values())
+            total = sum(s.sum for s in self._series.values())
         return {"count": count, "sum": total,
                 "p50": self.quantile(0.50), "p95": self.quantile(0.95),
                 "p99": self.quantile(0.99)}
 
     def expose(self) -> List[str]:
-        lines = [f"{self.name}_bucket{{le=\"{le}\"}} {c}"
-                 for le, c in self.bucket_counts().items()]
         with self._lock:
-            lines.append(f"{self.name}_sum {self._sum:g}")
-            lines.append(f"{self.name}_count {self._count}")
+            series = [(key, list(s.counts), s.sum, s.count)
+                      for key, s in sorted(self._series.items())]
+        if not series:
+            # an observation-free histogram still exposes its (empty)
+            # unlabeled series, as before label support
+            series = [((), [0] * (len(self.buckets) + 1), 0.0, 0)]
+        lines: List[str] = []
+        for key, counts, total, count in series:
+            running = 0
+            for b, c in zip(self.buckets, counts):
+                running += c
+                le = 'le="%g"' % b
+                lines.append(
+                    f"{self.name}_bucket{_fmt_labels(key, le)} {running}")
+            inf = 'le="+Inf"'
+            lines.append(
+                f"{self.name}_bucket{_fmt_labels(key, inf)} "
+                f"{running + counts[-1]}")
+            lines.append(f"{self.name}_sum{_fmt_labels(key)} {total:g}")
+            lines.append(f"{self.name}_count{_fmt_labels(key)} {count}")
         return lines
 
 

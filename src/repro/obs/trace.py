@@ -39,9 +39,9 @@ from collections import deque
 from typing import Dict, Iterable, List, Optional
 
 __all__ = [
-    "NullTracer", "Tracer", "get_tracer", "set_tracer", "use_tracer",
-    "span", "instant", "counter", "complete", "flush", "init_worker",
-    "merge_shards", "write_chrome_trace", "stage_seconds",
+    "NullTracer", "Tracer", "SamplingTracer", "get_tracer", "set_tracer",
+    "use_tracer", "span", "instant", "counter", "complete", "flush",
+    "init_worker", "merge_shards", "write_chrome_trace", "stage_seconds",
 ]
 
 
@@ -249,6 +249,113 @@ class Tracer:
             return None
         return {"shard_dir": self.shard_dir,
                 "autoflush": self.autoflush or 64}
+
+
+# --------------------------------------------------------- head sampling
+class _SampledSpan:
+    """Span guard for :class:`SamplingTracer`: tracks per-thread trace
+    depth and materialises a real ``_Span`` only when this trace's head
+    decision was *keep*. In a dropped trace the whole span costs two
+    thread-local touches and no clock read."""
+
+    __slots__ = ("_tracer", "_name", "_cat", "_args", "_inner")
+
+    def __init__(self, tracer: "SamplingTracer", name: str, cat: str,
+                 args: Optional[dict]):
+        self._tracer = tracer
+        self._name = name
+        self._cat = cat
+        self._args = args
+        self._inner: Optional[_Span] = None
+
+    def set(self, **args) -> "_SampledSpan":
+        if self._inner is not None:
+            self._inner.set(**args)
+        elif self._args is None:
+            self._args = args
+        else:
+            self._args.update(args)
+        return self
+
+    def __enter__(self) -> "_SampledSpan":
+        tl = self._tracer._tl
+        depth = getattr(tl, "depth", 0)
+        if depth == 0:
+            tl.keep = self._tracer._decide()
+        tl.depth = depth + 1
+        if tl.keep:
+            self._inner = _Span(self._tracer, self._name, self._cat,
+                                self._args)
+            self._inner.__enter__()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        tl = self._tracer._tl
+        tl.depth = max(0, getattr(tl, "depth", 1) - 1)
+        if self._inner is not None:
+            inner, self._inner = self._inner, None
+            return inner.__exit__(*exc)
+        return False
+
+
+class SamplingTracer(Tracer):
+    """Head-sampled always-on tracer for a live service.
+
+    The keep/drop decision is made once per *root* span — the first
+    span a thread opens with no span already active — with a
+    deterministic 1-in-N counter where ``N = round(1/rate)``; no RNG,
+    so tests and replays see the same traces. Child spans, instants,
+    and counters inside a kept trace record fully; inside a dropped
+    trace they are no-ops beyond a thread-local read. Events emitted
+    *outside* any span go through the same counter, so free-standing
+    instants/counters are sampled rather than always dropped.
+    ``rate=1.0`` keeps everything (plain ``Tracer`` parity).
+    """
+
+    def __init__(self, rate: float = 0.01, *, maxlen: int = 1 << 16,
+                 shard_dir: Optional[str] = None, autoflush: int = 0):
+        super().__init__(maxlen=maxlen, shard_dir=shard_dir,
+                         autoflush=autoflush)
+        if not 0.0 < rate <= 1.0:
+            raise ValueError(f"sample rate must be in (0, 1]: {rate}")
+        self.rate = float(rate)
+        self.period = max(1, round(1.0 / self.rate))
+        self._tl = threading.local()
+        self._heads = 0
+
+    def _decide(self) -> bool:
+        if self.period == 1:
+            return True
+        with self._lock:
+            n = self._heads
+            self._heads += 1
+        return n % self.period == 0
+
+    def _keep_now(self) -> bool:
+        """Sampling verdict for a non-span event: inherit the ambient
+        trace's head decision, or make one for a free-standing event."""
+        tl = self._tl
+        if getattr(tl, "depth", 0) > 0:
+            return getattr(tl, "keep", False)
+        return self._decide()
+
+    def span(self, name: str, cat: str = "",
+             args: Optional[dict] = None) -> "_SampledSpan":
+        return _SampledSpan(self, name, cat, args)
+
+    def instant(self, name: str, cat: str = "",
+                args: Optional[dict] = None) -> None:
+        if self._keep_now():
+            super().instant(name, cat, args)
+
+    def counter(self, name: str, value: float) -> None:
+        if self._keep_now():
+            super().counter(name, value)
+
+    def complete(self, name: str, t0: float, dur: float, cat: str = "",
+                 args: Optional[dict] = None) -> None:
+        if self._keep_now():
+            super().complete(name, t0, dur, cat, args)
 
 
 # ------------------------------------------------------- ambient tracer

@@ -9,7 +9,8 @@ from repro.service.admission import AdmissionController, ServiceOverloaded
 from repro.service.batcher import Batch, MicroBatcher, bucket_key
 from repro.service.cache import DecodeCache, content_key
 from repro.service.engine import DecodeService, ServiceConfig, ServiceShutdown
-from repro.service.metrics import RollingWindow, ServiceMetrics
+from repro.service.metrics import (RollingWindow, ServiceMetrics,
+                                   default_slo_objectives)
 from repro.service.router import BanditRouter
 
 __all__ = [
@@ -17,6 +18,6 @@ __all__ = [
     "Batch", "MicroBatcher", "bucket_key",
     "DecodeCache", "content_key",
     "DecodeService", "ServiceConfig", "ServiceShutdown",
-    "RollingWindow", "ServiceMetrics",
+    "RollingWindow", "ServiceMetrics", "default_slo_objectives",
     "BanditRouter",
 ]

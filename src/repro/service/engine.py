@@ -43,10 +43,12 @@ from repro.codecs import (DecodeOutcome, Decoder, ExecContext, open_decoder,
                           probe_outcome)
 from repro.jpeg.parser import UnsupportedJpeg
 from repro.obs import trace
+from repro.obs.http import TelemetryServer
+from repro.obs.slo import DEFAULT_WINDOWS_S, DecisionLog, SLOTracker
 from repro.service.admission import AdmissionController, ServiceOverloaded
 from repro.service.batcher import Batch, MicroBatcher
 from repro.service.cache import DecodeCache, content_key
-from repro.service.metrics import ServiceMetrics
+from repro.service.metrics import ServiceMetrics, default_slo_objectives
 from repro.service.router import BanditRouter
 
 
@@ -70,6 +72,20 @@ class ServiceConfig:
     entropy_workers: int = 0        # interval-parallel entropy decode per
                                     # arm session; 0 = ambient default
                                     # (resolved per caps, DESIGN.md §10)
+    # --- telemetry (DESIGN.md §12) ---
+    slo_objectives: Optional[Sequence] = None   # SLOObjective list; None
+                                    # = stock latency+availability pair
+    slo_latency_target_s: float = 0.25  # stock pair's latency threshold
+    slo_windows_s: Sequence[float] = DEFAULT_WINDOWS_S
+    slo_shed_burn: float = 0.0      # >0: shed while every window burns
+                                    # at >= this rate; 0 = observe only
+    slo_sample_interval_s: float = 1.0
+    metrics_port: Optional[int] = None  # None = no HTTP endpoint;
+                                    # 0 = bind an ephemeral port
+    metrics_host: str = "127.0.0.1"
+    trace_sample_rate: float = 0.0  # >0: install a head-sampled ambient
+                                    # tracer for the service's lifetime
+                                    # (1.0 = trace every request)
 
 
 @dataclasses.dataclass
@@ -94,11 +110,23 @@ class DecodeService:
         self.router = router or BanditRouter(
             paths, policy=self.cfg.policy, epsilon=self.cfg.epsilon,
             seed=self.cfg.seed)
-        self.admission = AdmissionController(
-            self.cfg.max_inflight, congestion=self.cfg.congestion)
         self.cache = (DecodeCache(self.cfg.cache_bytes)
                       if self.cfg.cache_bytes > 0 else None)
         self.metrics = ServiceMetrics(queue_depth_fn=self._queue_depth)
+        objectives = (list(self.cfg.slo_objectives)
+                      if self.cfg.slo_objectives is not None
+                      else default_slo_objectives(
+                          latency_target_s=self.cfg.slo_latency_target_s))
+        self.slo = SLOTracker(
+            self.metrics.registry, objectives,
+            windows_s=self.cfg.slo_windows_s,
+            shed_burn=self.cfg.slo_shed_burn or None,
+            min_sample_interval_s=self.cfg.slo_sample_interval_s)
+        self.audit = DecisionLog()
+        self.admission = AdmissionController(
+            self.cfg.max_inflight, congestion=self.cfg.congestion,
+            slo=self.slo, log=self.audit)
+        self.telemetry: Optional[TelemetryServer] = None
         self.batcher = MicroBatcher(self.cfg.max_batch,
                                     self.cfg.max_wait_ms / 1e3)
         self._inbound: "queue.Queue" = queue.Queue()
@@ -109,6 +137,7 @@ class DecodeService:
         # SERVICE context (the outcome-typed front door to each path)
         self._sessions: Dict[str, Decoder] = {}
         self._submit_lock = threading.Lock()
+        self._sampling_tracer: Optional[trace.SamplingTracer] = None
         self._started = False
         self._closed = False
         self._abort = False
@@ -118,6 +147,20 @@ class DecodeService:
         if self._started:
             return self
         self._started = True
+        if (self.cfg.trace_sample_rate > 0
+                and not trace.get_tracer().enabled):
+            # always-on head-sampled tracing for the service's lifetime;
+            # an explicitly installed tracer (bench --trace) wins
+            self._sampling_tracer = trace.SamplingTracer(
+                rate=self.cfg.trace_sample_rate)
+            trace.set_tracer(self._sampling_tracer)
+        if self.cfg.metrics_port is not None:
+            self.telemetry = TelemetryServer(
+                self.metrics.registry, slo=self.slo,
+                health_fn=self._health, host=self.cfg.metrics_host,
+                port=self.cfg.metrics_port,
+                sample_interval_s=self.cfg.slo_sample_interval_s)
+            self.telemetry.start()
         if self.cfg.num_workers > 0:
             t = threading.Thread(target=self._batcher_loop,
                                  name="svc-batcher", daemon=True)
@@ -154,6 +197,11 @@ class DecodeService:
             # session-lifecycle error — inline sessions just get GC'd.
             for sess in list(self._sessions.values()):
                 sess.close()
+        if self.telemetry is not None:
+            self.telemetry.stop()
+        if (self._sampling_tracer is not None
+                and trace.get_tracer() is self._sampling_tracer):
+            trace.set_tracer(None)
 
     def __enter__(self) -> "DecodeService":
         return self.start()
@@ -376,6 +424,16 @@ class DecodeService:
         return (self._inbound.qsize() + self.batcher.depth()
                 + self._batchq.qsize() * self.cfg.max_batch)
 
+    def _health(self) -> Dict[str, object]:
+        """Liveness payload for the telemetry ``/healthz`` endpoint."""
+        return {
+            "status": "ok" if self._started and not self._closed
+            else "stopped",
+            "inflight": self.admission.inflight,
+            "queue_depth": self._queue_depth(),
+            "workers": self.cfg.num_workers,
+        }
+
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, object]:
         return {
@@ -386,4 +444,7 @@ class DecodeService:
             "router_best": self.router.best(),
             "batcher": {"emitted": self.batcher.batches_emitted,
                         "deadline_flushes": self.batcher.deadline_flushes},
+            "slo": self.slo.status(),
+            "audit": {"decisions": self.audit.counts(),
+                      "recent_sheds": self.audit.entries("shed", limit=5)},
         }

@@ -24,9 +24,29 @@ from typing import Callable, Dict, Optional
 
 from repro.core.stats import percentile
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SLOObjective
 
 PERCENTILES = (50.0, 95.0, 99.0)
 RATE_HORIZON_S = 30.0
+
+
+def default_slo_objectives(*, latency_target_s: float = 0.25,
+                           latency_objective: float = 0.99,
+                           availability_objective: float = 0.999):
+    """The service's stock SLO pair against its own registry metrics:
+    p<latency_objective> of completions under ``latency_target_s``
+    (pick targets on histogram bucket boundaries — see
+    ``DEFAULT_LATENCY_BUCKETS``), and ``availability_objective`` of
+    submitted requests not failing."""
+    return [
+        SLOObjective.latency(
+            "latency", metric="service_latency_seconds",
+            threshold_s=latency_target_s, objective=latency_objective),
+        SLOObjective.error_ratio(
+            "availability", total="service_requests_total",
+            bad="service_failed_total",
+            objective=availability_objective),
+    ]
 
 
 class RollingWindow:
@@ -125,7 +145,8 @@ class ServiceMetrics:
     def record_completion(self, path_name: str, latency_s: float) -> None:
         with self._lock:
             self._completed.inc()
-            self._latency.observe(latency_s)
+            # per-path latency series; unlabeled reads still aggregate
+            self._latency.observe(latency_s, path=path_name)
             self._completions.add(1.0)
             self._path_hits.inc(path=path_name)
 

@@ -380,3 +380,22 @@ def test_compare_cli_exit_codes(tmp_path):
          "compare", a, b, "--warn-only"], env=env, capture_output=True,
         text=True, timeout=120)
     assert proc.returncode == 0, proc.stderr
+
+
+def test_summary_markdown_truncation_names_omitted_rows():
+    """A long regression table is capped at max_rows, and the cap is
+    announced in the table itself — silent truncation would read as
+    "covered everything" when it didn't."""
+    from repro.bench.compare import summary_markdown
+    base = [_rec(scenario=f"single/cell-{i:02d}", thr=100.0,
+                 samples=[99.0, 100.0, 101.0]) for i in range(7)]
+    new = [_rec(scenario=f"single/cell-{i:02d}", thr=30.0,
+                samples=[29.0, 30.0, 31.0]) for i in range(7)]
+    res = compare_records(base, new)
+    assert res.n_fail == 7
+    md = summary_markdown(res, max_rows=5)
+    assert "### Failures (7)" in md
+    assert "| … 2 more rows omitted | | | | |" in md
+    assert md.count("cell-") == 5              # only max_rows rendered
+    full = summary_markdown(res, max_rows=20)
+    assert "rows omitted" not in full and full.count("cell-") == 7

@@ -5,6 +5,7 @@ ServiceMetrics-on-registry parity."""
 import json
 import multiprocessing
 import os
+import re
 import threading
 import time
 
@@ -20,6 +21,49 @@ from repro.service.metrics import RATE_HORIZON_S, RollingWindow, \
     ServiceMetrics
 
 FAST = DECODE_PATHS["numpy-fast"]
+
+# ------------------------------------------- exposition-format validator
+# Prometheus text exposition grammar (version 0.0.4), strict: every
+# non-comment line is `name{label="v",...} value`, names/labels match
+# the spec charsets, every sample's metric carries a preceding # TYPE.
+# test_telemetry.py reuses this against the live /metrics body.
+_METRIC_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+_LABEL = r'[a-zA-Z_][a-zA-Z0-9_]*="[^"\\]*"'
+_SAMPLE_RE = re.compile(
+    rf"^({_METRIC_NAME})(\{{{_LABEL}(,{_LABEL})*\}})?"
+    r" (-?[0-9]+(\.[0-9]+)?([eE][-+]?[0-9]+)?|[-+]Inf|NaN)$")
+_TYPE_RE = re.compile(
+    rf"^# TYPE ({_METRIC_NAME}) (counter|gauge|histogram|untyped)$")
+_HELP_RE = re.compile(rf"^# HELP ({_METRIC_NAME}) [^\n]*$")
+
+
+def assert_valid_exposition(text: str) -> int:
+    """Validate a whole scrape page; returns the number of samples."""
+    assert text.endswith("\n"), "exposition must end with a newline"
+    types = {}
+    samples = 0
+    for ln in text.rstrip("\n").splitlines():
+        assert ln == ln.strip() and ln, f"blank or padded line {ln!r}"
+        if ln.startswith("# TYPE "):
+            m = _TYPE_RE.match(ln)
+            assert m, f"bad TYPE line {ln!r}"
+            types[m.group(1)] = m.group(2)
+            continue
+        if ln.startswith("#"):
+            assert _HELP_RE.match(ln), f"bad comment line {ln!r}"
+            continue
+        m = _SAMPLE_RE.match(ln)
+        assert m, f"bad sample line {ln!r}"
+        samples += 1
+        name = m.group(1)
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[:-len(suffix)] in types:
+                base = name[:-len(suffix)]
+        assert base in types, f"sample {name!r} with no preceding # TYPE"
+        if types[base] == "histogram" and name.endswith("_bucket"):
+            assert 'le="' in ln, f"histogram bucket without le: {ln!r}"
+    return samples
 
 
 # ------------------------------------------------------------- percentile
@@ -292,6 +336,59 @@ def test_histogram_boundary_lands_in_its_bucket():
     assert h.bucket_counts()["0.1"] == 1
 
 
+def test_histogram_label_series_select_and_aggregate():
+    h = Histogram("lat", buckets=(0.01, 0.1, 1.0), window=100)
+    h.observe(0.005, path="fast")
+    h.observe(0.005, path="fast")
+    h.observe(0.5, path="slow")
+    # labeled reads select one series; unlabeled reads aggregate all
+    assert h.bucket_counts(path="fast") == \
+        {"0.01": 2, "0.1": 2, "1": 2, "+Inf": 2}
+    assert h.bucket_counts(path="slow") == \
+        {"0.01": 0, "0.1": 0, "1": 1, "+Inf": 1}
+    assert h.bucket_counts() == {"0.01": 2, "0.1": 2, "1": 3, "+Inf": 3}
+    assert h.count == 3 and h.sum == pytest.approx(0.51)
+    assert h.quantile(1.0, path="fast") == 0.005
+    assert h.quantile(1.0) == 0.5
+    assert h.quantile(0.5, path="absent") == 0.0  # unknown series: empty
+    assert h.labelsets() == [{"path": "fast"}, {"path": "slow"}]
+    lines = h.expose()
+    assert 'lat_bucket{path="fast",le="+Inf"} 2' in lines
+    assert 'lat_bucket{path="slow",le="1"} 1' in lines
+    assert 'lat_count{path="fast"} 2' in lines
+    assert 'lat_sum{path="slow"} 0.5' in lines
+
+
+def test_histogram_empty_exposes_zeroed_unlabeled_series():
+    h = Histogram("lat", buckets=(0.1,))
+    lines = h.expose()
+    assert 'lat_bucket{le="0.1"} 0' in lines
+    assert 'lat_bucket{le="+Inf"} 0' in lines
+    assert "lat_count 0" in lines
+
+
+def test_exposition_page_valid_for_all_instrument_kinds():
+    """Strict Prometheus text-format check across counter, gauge
+    (value and callback), and histogram, with multi-label series."""
+    reg = MetricsRegistry()
+    reg.counter("req_total", help="requests seen").inc(3, path="fast",
+                                                       client="a")
+    reg.counter("req_total").inc(1, path="slow", client="b")
+    reg.counter("bare_total").inc(2.5)
+    reg.gauge("depth", help="queue depth").set(7)
+    reg.gauge("cb_gauge", fn=lambda: 1.5)
+    h = reg.histogram("lat_seconds", help="latency",
+                      buckets=(0.01, 0.1), window=16)
+    h.observe(0.005, path="fast")
+    h.observe(0.2, path="slow")
+    text = reg.render_prometheus()
+    n = assert_valid_exposition(text)
+    assert n >= 2 + 1 + 2 + 2 * 4   # series incl. per-label histograms
+    assert '# HELP req_total requests seen' in text
+    assert 'req_total{client="a",path="fast"} 3' in text
+    assert 'lat_seconds_bucket{path="slow",le="+Inf"} 1' in text
+
+
 def test_registry_get_or_create_and_kind_clash():
     reg = MetricsRegistry()
     c1 = reg.counter("x_total")
@@ -370,6 +467,21 @@ def test_service_metrics_on_registry_snapshot_parity():
     assert "# TYPE service_latency_seconds histogram" in text
     assert 'service_path_hits_total{path="numpy-fast"} 2' in text
     json.loads(sm.to_json())
+
+
+def test_service_metrics_latency_labeled_by_path():
+    sm = ServiceMetrics()
+    sm.record_completion("numpy-fast", 0.010)
+    sm.record_completion("numpy-fast", 0.020)
+    sm.record_completion("jnp-fused", 0.500)
+    h = sm.registry.get("service_latency_seconds")
+    assert h.count == 3                            # aggregate unchanged
+    assert h.quantile(1.0, path="numpy-fast") == 0.020
+    assert h.quantile(1.0, path="jnp-fused") == 0.500
+    assert {"path": "numpy-fast"} in h.labelsets()
+    text = sm.render_prometheus()
+    assert 'service_latency_seconds_count{path="jnp-fused"} 1' in text
+    assert_valid_exposition(text)
 
 
 def test_service_metrics_shared_registry():

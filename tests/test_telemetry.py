@@ -1,0 +1,473 @@
+"""Live-service telemetry: declarative SLOs with multi-window burn
+rates, the admission SLO gate + decision audit log, the loopback HTTP
+exposition endpoint (against a bare registry and a running
+DecodeService), and head-sampled always-on tracing with its pinned
+overhead budget."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.jpeg.paths import DECODE_PATHS
+from repro.obs import trace
+from repro.obs.http import PROMETHEUS_CONTENT_TYPE, TelemetryServer
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import (DEFAULT_WINDOWS_S, DecisionLog, SLOObjective,
+                           SLOTracker)
+from repro.service import (AdmissionController, DecodeService,
+                           ServiceConfig, ServiceOverloaded,
+                           default_slo_objectives)
+
+from test_obs import assert_valid_exposition
+
+FAST = DECODE_PATHS["numpy-fast"]
+
+
+# ------------------------------------------------------------ objectives
+def test_slo_objective_constructors_budget_and_validation():
+    lat = SLOObjective.latency("p99", metric="lat_seconds",
+                               threshold_s=0.25, objective=0.99)
+    assert lat.kind == "latency"
+    assert lat.budget == pytest.approx(0.01)
+    err = SLOObjective.error_ratio("avail", total="req_total",
+                                   bad="fail_total", objective=0.999)
+    assert err.kind == "error_ratio"
+    assert err.budget == pytest.approx(0.001)
+    with pytest.raises(ValueError, match="kind"):
+        SLOObjective(name="x", kind="weird", objective=0.9)
+    with pytest.raises(ValueError, match=r"in \(0, 1\)"):
+        SLOObjective.latency("x", metric="m", threshold_s=1.0,
+                             objective=1.0)
+    with pytest.raises(ValueError, match="threshold_s"):
+        SLOObjective(name="x", kind="latency", objective=0.9, metric="m")
+    with pytest.raises(ValueError, match="counter names"):
+        SLOObjective(name="x", kind="error_ratio", objective=0.9,
+                     total="t")
+
+
+def _tracker(objectives, **kw):
+    reg = MetricsRegistry()
+    return reg, SLOTracker(reg, objectives, **kw)
+
+
+def test_slo_tracker_rejects_bad_config():
+    reg = MetricsRegistry()
+    o = SLOObjective.error_ratio("a", total="t", bad="b")
+    with pytest.raises(ValueError, match="duplicate"):
+        SLOTracker(reg, [o, o])
+    with pytest.raises(ValueError, match="windows"):
+        SLOTracker(reg, [o], windows_s=())
+    with pytest.raises(ValueError, match="shed_burn"):
+        SLOTracker(reg, [o], shed_burn=0.0)
+    with pytest.raises(KeyError, match="unknown objective"):
+        SLOTracker(reg, [o]).burn_rates("nope")
+
+
+def test_error_ratio_burn_math_per_window():
+    """Burn is (bad_delta/total_delta)/budget differenced per window:
+    inject points at explicit times and check each window separately."""
+    reg, trk = _tracker(
+        [SLOObjective.error_ratio("avail", total="req_total",
+                                  bad="fail_total", objective=0.99)],
+        windows_s=(60.0, 300.0))
+    req = reg.counter("req_total")
+    fail = reg.counter("fail_total")
+    req.inc(1000)
+    trk.sample(t=0.0)                      # (0, 0 bad, 1000 total)
+    req.inc(1000)
+    trk.sample(t=250.0)                    # (250, 0, 2000)
+    req.inc(10)
+    fail.inc(10)
+    trk.sample(t=299.0)                    # (299, 10, 2010)
+    burns = trk.burn_rates("avail", t=299.0)
+    # 60s window sees only the last two points: 10 bad / 10 total over
+    # budget 0.01 -> burn 100; 300s window spans all three: 10/1010/0.01
+    assert burns["60s"] == pytest.approx(100.0)
+    assert burns["300s"] == pytest.approx(10 / 1010 / 0.01)
+
+
+def test_burn_zero_without_traffic_or_enough_points():
+    reg, trk = _tracker(
+        [SLOObjective.error_ratio("a", total="t", bad="b")],
+        windows_s=(60.0,))
+    assert trk.burn_rates("a", t=0.0) == {"60s": 0.0}   # no points
+    reg.counter("t").inc(5)
+    trk.sample(t=0.0)
+    assert trk.burn_rates("a", t=0.0) == {"60s": 0.0}   # single point
+    trk.sample(t=10.0)                                  # no new traffic
+    assert trk.burn_rates("a", t=10.0) == {"60s": 0.0}
+
+
+def test_latency_objective_threshold_snaps_to_bucket():
+    reg, trk = _tracker(
+        [SLOObjective.latency("p", metric="lat", threshold_s=0.3,
+                              objective=0.5)],
+        windows_s=(60.0,))
+    h = reg.histogram("lat", buckets=(0.1, 0.25, 1.0))
+    # 0.3 snaps DOWN to the 0.25 boundary: 0.2 is good, 0.5 is bad
+    h.observe(0.2)
+    h.observe(0.5)
+    trk.sample(t=0.0)
+    h.observe(0.2)
+    h.observe(0.5)
+    trk.sample(t=30.0)
+    burns = trk.burn_rates("p", t=30.0)
+    assert burns["60s"] == pytest.approx(0.5 / 0.5)     # 1 bad of 2, /0.5
+
+
+def test_multi_window_conjunction_gates_shedding():
+    """shed only when EVERY window burns: a fresh spike trips the short
+    window but not the long one, so admission must not flap."""
+    reg, trk = _tracker(
+        [SLOObjective.error_ratio("a", total="t", bad="b",
+                                  objective=0.99)],
+        windows_s=(60.0, 300.0), shed_burn=5.0,
+        clock=lambda: 299.0)
+    req, bad = reg.counter("t"), reg.counter("b")
+    req.inc(1000)
+    trk.sample(t=0.0)
+    req.inc(1000)
+    trk.sample(t=250.0)
+    req.inc(10)
+    bad.inc(10)
+    trk.sample(t=299.0)
+    # 60s burns 100 but 300s burns ~0.99 < 5: conjunction holds the gate
+    shed, signal = trk.should_shed()
+    assert shed is False and signal == {}
+    # sustained burn: both windows over threshold -> shed, with signal
+    bad.inc(200)
+    req.inc(200)
+    trk.sample(t=299.0)
+    shed, signal = trk.should_shed()
+    assert shed is True
+    assert signal["objective"] == "a" and signal["shed_burn"] == 5.0
+    assert all(v >= 5.0 for v in signal["burn"].values())
+
+
+def test_should_shed_observe_only_and_sample_cadence():
+    fake_t = [0.0]
+    reg, trk = _tracker(
+        [SLOObjective.error_ratio("a", total="t", bad="b")],
+        windows_s=(60.0,), min_sample_interval_s=10.0,
+        clock=lambda: fake_t[0])
+    assert trk.should_shed() == (False, {})        # shed_burn None: never
+    assert trk.maybe_sample() is True              # first sample is due
+    fake_t[0] = 5.0
+    assert trk.maybe_sample() is False             # inside the interval
+    fake_t[0] = 10.0
+    assert trk.maybe_sample() is True
+
+
+def test_status_payload_shape():
+    reg, trk = _tracker(default_slo_objectives(), shed_burn=14.4)
+    reg.histogram("service_latency_seconds").observe(0.01)
+    reg.counter("service_requests_total").inc(2)
+    reg.counter("service_failed_total").inc(1)
+    st = trk.status()
+    assert st["windows_s"] == sorted(DEFAULT_WINDOWS_S)
+    assert st["shed_burn"] == 14.4 and st["should_shed"] is False
+    by = {o["name"]: o for o in st["objectives"]}
+    lat, avail = by["latency"], by["availability"]
+    assert lat["kind"] == "latency" and lat["metric"] and \
+        lat["threshold_s"] > 0
+    assert lat["observed_quantile_s"] == 0.01
+    assert avail["total_metric"] == "service_requests_total"
+    assert avail["good_ratio"] == pytest.approx(0.5)
+    assert set(avail["burn"]) == {"60s", "300s", "1800s"}
+    json.dumps(st)                                 # JSON-ready contract
+
+
+# ------------------------------------------------------------- audit log
+def test_decision_log_bounded_counts_and_filters():
+    log = DecisionLog(maxlen=3)
+    for i in range(5):
+        log.record("admit", client=f"c{i}", signal={"inflight": i})
+    log.record("shed", client="c9", reason="queue saturated",
+               signal={"inflight": 64})
+    assert len(log) == 3                           # bounded ring
+    assert log.counts() == {"admit": 5, "shed": 1}  # counts are lifetime
+    sheds = log.entries("shed")
+    assert len(sheds) == 1 and sheds[0]["reason"] == "queue saturated"
+    assert sheds[0]["signal"] == {"inflight": 64}
+    assert len(log.entries(limit=2)) == 2
+
+
+def test_admission_audits_saturation_and_fairness_sheds():
+    log = DecisionLog()
+    adm = AdmissionController(2, log=log)
+    assert adm.try_admit("a")[0] and adm.try_admit("a")[0]
+    ok, reason = adm.try_admit("b")
+    assert not ok and reason == "queue saturated"
+    sheds = log.entries("shed")
+    assert sheds[-1]["signal"] == {"inflight": 2, "max_inflight": 2}
+    admits = log.entries("admit")
+    assert admits[0]["signal"] == {"inflight": 1, "held": 1}
+    adm.release("a")
+    # congested (1/2 >= 0.75*2 is false with default; force fairness via
+    # a tighter controller)
+    adm2 = AdmissionController(4, congestion=0.5, log=log)
+    for _ in range(2):
+        assert adm2.try_admit("greedy")[0]
+    ok, reason = adm2.try_admit("greedy")
+    assert not ok and reason == "client over fair share"
+    fair = log.entries("shed")[-1]
+    assert fair["client"] == "greedy"
+    assert fair["signal"]["fair_share"] >= 1
+    assert {"inflight", "held", "max_inflight"} <= set(fair["signal"])
+
+
+class _BurningSLO:
+    """SLOTracker stand-in whose verdict the test scripts directly."""
+
+    def __init__(self, shed=True):
+        self.shed = shed
+
+    def should_shed(self):
+        if self.shed:
+            return True, {"objective": "latency", "burn": {"60s": 99.0}}
+        return False, {}
+
+
+def test_admission_slo_gate_sheds_before_slot_accounting():
+    log = DecisionLog()
+    adm = AdmissionController(8, slo=_BurningSLO(), log=log)
+    ok, reason = adm.try_admit("c1")
+    assert not ok and reason == "slo burn rate"
+    assert adm.stats()["rejected_slo"] == 1
+    assert adm.inflight == 0                       # no slot was taken
+    entry = log.entries("shed")[-1]
+    assert entry["reason"] == "slo burn rate"
+    # the audit signal carries both the burn and the slot context
+    assert entry["signal"]["objective"] == "latency"
+    assert entry["signal"]["burn"] == {"60s": 99.0}
+    assert entry["signal"]["inflight"] == 0
+    assert entry["signal"]["max_inflight"] == 8
+    # gate lifts -> admits flow again
+    adm.slo = _BurningSLO(shed=False)
+    assert adm.try_admit("c1") == (True, "")
+
+
+def test_service_sheds_on_slo_burn_with_audited_reason(corpus):
+    """End-to-end: a burning SLO makes DecodeService.submit raise
+    ServiceOverloaded and the audit log says why."""
+    cfg = ServiceConfig(num_workers=0, cache_bytes=0)
+    with DecodeService(cfg, paths=[FAST]) as svc:
+        img = svc.decode(corpus.files[0])
+        assert img.ndim == 3
+        svc.admission.slo = _BurningSLO()
+        with pytest.raises(ServiceOverloaded, match="slo burn rate"):
+            svc.decode(corpus.files[1])
+        stats = svc.stats()
+        assert stats["admission"]["rejected_slo"] == 1
+        assert stats["audit"]["decisions"]["shed"] == 1
+        assert stats["audit"]["recent_sheds"][0]["reason"] == \
+            "slo burn rate"
+
+
+# ---------------------------------------------------------- HTTP endpoint
+def _get(url, timeout=10):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.headers.get("Content-Type"), \
+            r.read().decode("utf-8")
+
+
+def test_telemetry_server_serves_metrics_healthz_slo():
+    reg = MetricsRegistry()
+    reg.counter("req_total", help="requests").inc(3, path="fast")
+    reg.histogram("lat_seconds").observe(0.02)
+    trk = SLOTracker(reg, [SLOObjective.latency(
+        "p99", metric="lat_seconds", threshold_s=0.25)])
+    health = {"status": "ok", "workers": 2}
+    with TelemetryServer(reg, slo=trk, health_fn=lambda: dict(health),
+                         sample_interval_s=0.0) as srv:
+        assert srv.port > 0                        # ephemeral port bound
+        base = srv.url
+        status, ctype, body = _get(base + "/metrics")
+        assert status == 200 and ctype == PROMETHEUS_CONTENT_TYPE
+        assert_valid_exposition(body)
+        assert 'req_total{path="fast"} 3' in body
+        assert "lat_seconds_bucket" in body
+        status, ctype, body = _get(base + "/healthz")
+        assert status == 200 and ctype == "application/json"
+        assert json.loads(body) == {"status": "ok", "workers": 2}
+        status, _, body = _get(base + "/slo")
+        slo = json.loads(body)
+        assert [o["name"] for o in slo["objectives"]] == ["p99"]
+        assert set(slo["objectives"][0]["burn"]) == \
+            {f"{w:g}s" for w in DEFAULT_WINDOWS_S}
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(base + "/nope")
+        assert ei.value.code == 404
+        hint = json.loads(ei.value.read().decode())
+        assert hint["paths"] == ["/metrics", "/healthz", "/slo"]
+        # query strings are tolerated like a real scrape target
+        assert _get(base + "/metrics?ts=1")[0] == 200
+    # stopped server no longer accepts connections
+    with pytest.raises((urllib.error.URLError, ConnectionError, OSError)):
+        urllib.request.urlopen(base + "/metrics", timeout=0.5)
+
+
+def test_telemetry_server_degraded_health_and_missing_slo():
+    reg = MetricsRegistry()
+    with TelemetryServer(reg, health_fn=lambda: {"status": "draining"}) \
+            as srv:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/healthz")
+        assert ei.value.code == 503
+        assert json.loads(ei.value.read().decode())["status"] == "draining"
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(srv.url + "/slo")                 # no tracker attached
+        assert ei.value.code == 404
+
+
+def test_telemetry_server_port_clash_raises_on_start():
+    reg = MetricsRegistry()
+    with TelemetryServer(reg) as srv:
+        clash = TelemetryServer(reg, port=srv.port)
+        with pytest.raises(OSError):
+            clash.start()
+
+
+def test_live_service_scrape_end_to_end(corpus):
+    """The ISSUE acceptance path: a running DecodeService serves valid
+    Prometheus text and burn-rate SLO JSON from its own endpoint."""
+    cfg = ServiceConfig(num_workers=2, metrics_port=0,
+                        trace_sample_rate=1.0, cache_bytes=0,
+                        slo_sample_interval_s=0.05)
+    with DecodeService(cfg, paths=[FAST]) as svc:
+        for data in corpus.files[:6]:
+            svc.decode(data)
+        base = svc.telemetry.url
+        status, ctype, body = _get(base + "/metrics")
+        assert status == 200 and ctype == PROMETHEUS_CONTENT_TYPE
+        assert_valid_exposition(body)
+        assert 'service_latency_seconds_count{path="numpy-fast"} 6' \
+            in body
+        assert "service_completed_total 6" in body
+        assert "service_queue_depth" in body
+        health = json.loads(_get(base + "/healthz")[2])
+        assert health["status"] == "ok" and health["workers"] == 2
+        slo = json.loads(_get(base + "/slo")[2])
+        assert {o["name"] for o in slo["objectives"]} == \
+            {"latency", "availability"}
+        for o in slo["objectives"]:
+            assert o["burn"], o
+        by = {o["name"]: o for o in slo["objectives"]}
+        assert by["availability"]["total"] == 6.0
+        assert by["availability"]["good_ratio"] == 1.0
+        # the engine's stats() surface carries the same SLO status
+        assert svc.stats()["slo"]["objectives"]
+    with pytest.raises((urllib.error.URLError, ConnectionError, OSError)):
+        urllib.request.urlopen(base + "/healthz", timeout=0.5)
+
+
+# -------------------------------------------------------- sampled tracing
+def test_sampling_tracer_rate_validation():
+    with pytest.raises(ValueError, match="sample rate"):
+        trace.SamplingTracer(rate=0.0)
+    with pytest.raises(ValueError, match="sample rate"):
+        trace.SamplingTracer(rate=1.5)
+
+
+def test_sampling_tracer_rate_one_keeps_everything():
+    tr = trace.SamplingTracer(rate=1.0, maxlen=256)
+    with trace.use_tracer(tr):
+        for _ in range(5):
+            with trace.span("root"):
+                with trace.span("child"):
+                    pass
+    names = [e["name"] for e in tr.events() if e["ph"] == "X"]
+    assert names.count("root") == 5 and names.count("child") == 5
+
+
+def test_sampling_tracer_keeps_whole_traces_deterministically():
+    """period-2 head sampling: every 2nd ROOT span is kept, and a kept
+    trace keeps its children/instants while a dropped trace drops them
+    — the decision is per-trace, never per-event."""
+    tr = trace.SamplingTracer(rate=0.5, maxlen=1024)
+    assert tr.period == 2
+    with trace.use_tracer(tr):
+        for i in range(6):
+            with trace.span("root", i=i):
+                with trace.span("child"):
+                    trace.instant("inside")
+    evs = tr.events()
+    roots = [e for e in evs if e["name"] == "root"]
+    # heads 0, 2, 4 kept: deterministic counter, no RNG
+    assert [e["args"]["i"] for e in roots] == [0, 2, 4]
+    assert len([e for e in evs if e["name"] == "child"]) == 3
+    assert len([e for e in evs if e["name"] == "inside"]) == 3
+    # free-standing events (no open span) go through the same counter
+    tr2 = trace.SamplingTracer(rate=0.5, maxlen=64)
+    for _ in range(4):
+        tr2.instant("lone")
+    assert len([e for e in tr2.events() if e["name"] == "lone"]) == 2
+
+
+def test_sampling_tracer_threads_decide_independently():
+    """Depth is thread-local: a trace open on one thread must not make
+    another thread's root span look like a child."""
+    tr = trace.SamplingTracer(rate=1.0, maxlen=256)
+    seen = []
+
+    def worker(k):
+        with tr.span(f"t{k}"):
+            time.sleep(0.01)
+            seen.append(k)
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    names = {e["name"] for e in tr.events() if e["ph"] == "X"}
+    assert names == {f"t{k}" for k in range(4)} and len(seen) == 4
+
+
+def test_engine_installs_and_restores_sampling_tracer(corpus):
+    assert not trace.get_tracer().enabled          # ambient must be Null
+    cfg = ServiceConfig(num_workers=0, trace_sample_rate=0.5)
+    with DecodeService(cfg, paths=[FAST]) as svc:
+        installed = trace.get_tracer()
+        assert isinstance(installed, trace.SamplingTracer)
+        assert installed.period == 2
+        svc.decode(corpus.files[0])
+    assert not trace.get_tracer().enabled          # restored on stop
+
+    # an explicitly installed tracer wins over the config knob
+    explicit = trace.Tracer(maxlen=64)
+    with trace.use_tracer(explicit):
+        with DecodeService(cfg, paths=[FAST]) as svc:
+            assert trace.get_tracer() is explicit
+    assert not trace.get_tracer().enabled
+
+
+def _time_sampled_spans(tracer, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tracer.span("x"):
+            pass
+    return time.perf_counter() - t0
+
+
+def test_sampled_tracing_overhead_under_budget(corpus):
+    """Same contract as the NullTracer guard in test_obs: at a 1%
+    sample rate the per-span cost of dropped traces must stay under 5%
+    of a single fast decode, so always-on tracing is affordable."""
+    tr = trace.SamplingTracer(rate=0.01, maxlen=1 << 14)
+    with tr.span("burn"):                          # consume head i=0
+        pass
+    n = 20_000
+    span_cost = min(_time_sampled_spans(tr, n) for _ in range(3)) / n
+    t0 = time.perf_counter()
+    FAST.decode(corpus.files[0])
+    decode_s = time.perf_counter() - t0
+    spans_per_decode = 6
+    overhead = spans_per_decode * span_cost / decode_s
+    assert overhead < 0.05, (
+        f"sampled span {span_cost * 1e9:.0f}ns x {spans_per_decode} "
+        f"= {overhead:.2%} of a {decode_s * 1e3:.2f}ms decode")
